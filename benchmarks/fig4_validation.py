@@ -1,0 +1,25 @@
+"""Fig. 4 / Sec. III: CCT-like MHSA on GAP8 — modelled vs measured vs
+the paper's own Stream estimate."""
+
+from repro.core import validation
+
+
+def run() -> list:
+    rows = []
+    for v in validation.validate_all():
+        rows.append({
+            "name": f"fig4_seq{v.seq_len}",
+            "modeled_mcycles": round(v.modeled_mcycles, 4),
+            "paper_stream_mcycles": v.paper_model_mcycles,
+            "measured_mcycles": v.measured_mcycles,
+            "dev_vs_stream": round(v.deviation_vs_paper_model, 4),
+            "dev_vs_measured": round(v.deviation_vs_measured, 4),
+            "macs": v.macs,
+            "mac_per_cycle": round(v.macs_per_cycle, 3),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,57 @@
+"""Fig. 5: active-feature memory over time for the memory-optimal
+layer-by-layer and layer-fused schedules, at M<N / M=N / M>N."""
+
+from repro.core import analytical as an
+from repro.core import fusion
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import pe_array_64x64
+
+SHAPES = {"M<N": (128, 512), "M=N": (256, 256), "M>N": (512, 128)}
+SCHEDULES = {
+    "lbl": fusion.lbl,                      # Fig. 5a
+    "fuse_q_qkt": fusion.fuse_q_qkt,        # Fig. 5b
+    "fuse_pv": fusion.fuse_pv,              # Fig. 5c
+}
+
+
+def run() -> list:
+    accel = pe_array_64x64()
+    rows = []
+    for regime, (M, N) in SHAPES.items():
+        head = wl.attention_head(M, N)
+        for sname, builder in SCHEDULES.items():
+            res = sch.evaluate(head, accel, builder(),
+                               row_block=max(1, M // 64))
+            words = [w for _, w in res.trace]
+            rows.append({
+                "name": f"fig5_{regime}_{sname}",
+                "M": M, "N": N,
+                "peak_words": res.peak_active_words,
+                "start_words": words[0],
+                "end_words": words[-1],
+                "latency_cycles": res.latency_cycles,
+                "a_lbl": an.a_lbl(M, N),
+                "a_lf": an.a_lf(M, N),
+                "trace_points": len(words),
+            })
+    return rows
+
+
+def trace_csv(M: int, N: int, schedule: str = "auto") -> str:
+    """Full (cycle, words) trace for plotting one Fig. 5 panel."""
+    accel = pe_array_64x64()
+    if schedule == "auto":
+        schedule = fusion.select_schedule(M, N)
+    builder = {"lbl": fusion.lbl, "fuse_q_qkt": fusion.fuse_q_qkt,
+               "fuse_pv": fusion.fuse_pv}[schedule]
+    res = sch.evaluate(wl.attention_head(M, N), accel, builder(),
+                       row_block=max(1, M // 64))
+    lines = ["cycle,active_words"]
+    lines += [f"{t:.0f},{w}" for t, w in res.trace]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,28 @@
+"""Fig. 6: relative memory footprint gain alpha(M/N) — engine-measured
+(best explored schedule / best LBL) vs the closed forms Eq. 3/7."""
+
+from repro.core import analytical as an
+from repro.core import fusion
+
+
+def run() -> list:
+    rows = []
+    N = 256
+    for e in range(-4, 5):
+        M = N * (2 ** e) if e >= 0 else N // (2 ** -e)
+        best = fusion.explore(M, N)[0]
+        a_engine = best.result.peak_active_words / an.a_lbl(M, N)
+        rows.append({
+            "name": f"fig6_MoverN_{M / N:g}",
+            "M": M, "N": N,
+            "alpha_engine": round(a_engine, 4),
+            "alpha_closed_form": round(an.alpha(M, N), 4),
+            "best_schedule": best.schedule.name,
+            "match": abs(a_engine - an.alpha(M, N)) < 1e-6,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,52 @@
+"""Runtime fused-schedule benchmark: layer-fused vs layer-by-layer
+attention — wall time (CPU lax paths; the Pallas kernels target TPU)
+and the derived HBM-traffic gain on the TPU model (the runtime
+re-expression of the paper's alpha)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codesign
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (sq, skv, d, tag) in [(512, 512, 64, "train-ish"),
+                              (1, 4096, 128, "decode-ish")]:
+        q = jax.random.normal(key, (1, 8, sq, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1),
+                              (1, 2, skv, d), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2),
+                              (1, 2, skv, d), jnp.float32)
+        fused = jax.jit(lambda q, k, v: ops.attention(
+            q, k, v, causal=True, impl="xla", block_q=256, block_k=512))
+        unfused = jax.jit(lambda q, k, v: ops.attention(
+            q, k, v, causal=True, impl="reference"))
+        t_f = _time(fused, q, k, v)
+        t_u = _time(unfused, q, k, v)
+        rows.append({
+            "name": f"kernel_{tag}_{sq}x{skv}",
+            "us_fused": round(t_f, 1),
+            "us_unfused": round(t_u, 1),
+            "hbm_gain_tpu_model": round(
+                codesign.fused_traffic_gain(skv, d), 4),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

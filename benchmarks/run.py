@@ -1,0 +1,28 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV lines per the repo
+contract plus a readable report.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+import json
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig4_validation, fig5_memory_traces,
+                            fig6_alpha, kernel_bench, roofline,
+                            tableI_features)
+    print("name,us_per_call,derived")
+    for mod in (fig4_validation, fig5_memory_traces, fig6_alpha,
+                tableI_features, kernel_bench, roofline):
+        t0 = time.perf_counter()
+        rows = mod.run()
+        us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for r in rows:
+            name = r.pop("name")
+            print(f"{name},{us:.0f},\"{json.dumps(r)}\"")
+
+
+if __name__ == "__main__":
+    main()

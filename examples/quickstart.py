@@ -1,0 +1,68 @@
+"""Quickstart: the paper's result in 60 seconds.
+
+1. Ask the analytical engine (the Stream extension) for the optimal
+   execution schedule of an attention head at two input shapes — it
+   rediscovers the paper's Fig. 5b/5c fusions and their memory gains.
+2. Run the SAME schedules as real TPU-style fused kernels (interpret
+   mode on CPU) and verify numerics against the unfused oracle.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytical, fusion
+from repro.kernels import ops, ref
+
+
+def explore(M, N):
+    rel = "<" if M < N else (">" if M > N else "=")
+    print(f"\n=== attention head, input {M}x{N} (M {rel} N) ===")
+    results = fusion.explore(M, N)
+    lbl_peak = analytical.a_lbl(M, N)
+    for r in results[:3]:
+        a = r.result.peak_active_words / lbl_peak
+        print(f"  {r.schedule.name:22s} peak={r.result.peak_active_words:9d} "
+              f"words  alpha={a:.3f}  latency={r.result.latency_cycles:.0f}")
+    best = results[0]
+    print(f"  -> engine picks {best.schedule.name}; paper's closed form "
+          f"alpha={analytical.alpha(M, N):.3f} "
+          f"(A_LF={analytical.a_lf(M, N)})")
+
+
+def run_kernels():
+    print("\n=== the same schedules as fused kernels (CPU interpret) ===")
+    key = jax.random.PRNGKey(0)
+    # M >> N regime (train/prefill): Fig. 5c fused attention
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 512, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 512, 64))
+    from repro.kernels.fused_attention import fused_attention
+    o = fused_attention(q, k, v, True, None, None, 128, 128, True)
+    o_ref = ref.attention_reference(q, k, v, causal=True)
+    print(f"  fuse[QKT->SM->AV]  (M=512 > N=64): max err "
+          f"{float(jnp.abs(o - o_ref).max()):.2e} "
+          f"(scores never materialised)")
+
+    # M << N regime (decode): Fig. 5b Q-projection fusion
+    x = jax.random.normal(key, (1, 64, 512)) * 0.1
+    wq = jax.random.normal(jax.random.fold_in(key, 3), (512, 4, 64)) * .05
+    from repro.kernels.fused_qproj_attention import fused_qproj_attention
+    o2 = fused_qproj_attention(x, wq, k, v, True, None, None, 64, 128,
+                               True)
+    o2_ref = ref.qproj_attention_reference(x, wq, k, v, causal=True)
+    print(f"  fuse[Q->QKT]       (M=64 < N=512): max err "
+          f"{float(jnp.abs(o2 - o2_ref).max()):.2e} "
+          f"(Q never stored)")
+    print(f"  runtime selector: seq=4096,d=128 -> "
+          f"{ops.schedule_for(4096, 128)}; decode M=1 -> "
+          f"{ops.schedule_for(1, 128)}")
+
+
+if __name__ == "__main__":
+    explore(128, 1024)   # paper: alpha ~ 0.71, 29% reduction
+    explore(1024, 128)   # paper: alpha = 0.3, 70% reduction
+    explore(256, 256)    # paper: no gain at M == N
+    run_kernels()

@@ -1,0 +1,12 @@
+"""Serving example: continuous-batching engine over prefill + decode —
+decode is the paper's M<N schedule regime (Fig. 5b), prefill the M>N
+regime (Fig. 5c).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3-8b", "--smoke", "--requests", "6",
+          "--batch", "4", "--max-new", "12"])

@@ -1,0 +1,130 @@
+"""Architecture registry + assigned input shapes + dry-run input specs.
+
+ARCHS: the 10 assigned architectures; each module has CONFIG (exact
+published dims) and SMOKE_CONFIG (reduced same-family, CPU-runnable).
+
+SHAPES (assignment): per LM arch —
+    train_4k     seq 4096   global_batch 256   (train_step)
+    prefill_32k  seq 32768  global_batch 32    (serve prefill)
+    decode_32k   seq 32768  global_batch 128   (serve_step, 1 new token)
+    long_500k    seq 524288 global_batch 1     (serve_step; sub-quadratic
+                                                archs only)
+
+Skips (DESIGN.md §3): hubert (encoder-only) has no decode/long shapes;
+long_500k runs only for mamba2 (SSM) and jamba (hybrid).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ARCHS = {
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_15_large",
+}
+
+SUBQUADRATIC = {"mamba2-130m", "jamba-1.5-large-398b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def list_archs() -> list:
+    return list(ARCHS)
+
+
+def applicable(arch: str, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's rules."""
+    if arch in ENCODER_ONLY and shape_name in ("decode_32k", "long_500k"):
+        return False, "encoder-only: no autoregressive decode"
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "pure full-attention arch: long_500k needs " \
+                      "sub-quadratic attention (assignment rule)"
+    return True, ""
+
+
+def cells(arch: Optional[str] = None) -> list:
+    """All (arch, shape, runnable, reason) assignment cells."""
+    archs = [arch] if arch else list_archs()
+    out = []
+    for a in archs:
+        for s in SHAPES:
+            ok, why = applicable(a, s)
+            out.append((a, s, ok, why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, zero allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str, cfg=None) -> dict:
+    """The model-input stand-ins for one assignment cell.
+
+    train  -> {"batch": {tokens/embeds/targets...}}
+    prefill-> {"tokens"/"embeds", "state"-shape info}
+    decode -> decode-state geometry (built by launch.dryrun via
+              eval_shape to avoid allocation).
+    """
+    cfg = cfg or get_config(arch)
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+
+    if sh.kind == "train":
+        if arch == "hubert-xlarge":
+            batch = {"embeds": _sds((b, s, cfg.frontend_dim), emb_dt),
+                     "targets": _sds((b, s), jnp.int32)}
+        elif arch == "internvl2-2b":
+            from repro.configs.internvl2_2b import PATCH_TOKENS
+            text = s - PATCH_TOKENS
+            batch = {"embeds": _sds((b, PATCH_TOKENS, cfg.frontend_dim),
+                                    emb_dt),
+                     "tokens": _sds((b, text + 1), jnp.int32)}
+        else:
+            batch = {"tokens": _sds((b, s + 1), jnp.int32)}
+        return {"batch": batch}
+
+    if sh.kind == "prefill":
+        if arch == "hubert-xlarge":
+            return {"embeds": _sds((b, s, cfg.frontend_dim), emb_dt)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+
+    # decode: one new token against a seq_len-deep cache
+    return {"batch": b, "max_len": s}

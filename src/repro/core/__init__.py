@@ -1,0 +1,37 @@
+# The paper's primary contribution: a Stream-class analytical DSE engine
+# extended with transformer layer types (matmul-on-features, transpose,
+# softmax) and layer-fused scheduling, plus the shape-driven schedule
+# selector reused by the TPU runtime.
+from repro.core import analytical, codesign
+from repro.core.accelerator import (Accelerator, Core, MemoryLevel,
+                                    SIMDUnit, gap8, multi_core_array,
+                                    pe_array_64x64, tpu_v5e_like)
+from repro.core.allocation import GAResult, heads_schedule, optimize_allocation
+from repro.core.dependencies import ALL, Requirement, required_inputs
+from repro.core.fusion import (best_schedule, explore, fuse_all, fuse_pv,
+                               fuse_q_qkt, lbl, select_schedule)
+from repro.core.nodes import ComputationNode, split_layer, split_workload
+from repro.core.scheduler import (IllegalSchedule, Result, Schedule, Stage,
+                                  evaluate, layer_by_layer)
+from repro.core.validation import validate, validate_all
+from repro.core.workload import (INPUT, WEIGHT, Elementwise, Layer,
+                                 LayerNorm, MatMul, Softmax, Transpose,
+                                 Workload, attention_head, cct_mhsa, mhsa,
+                                 parallel_heads)
+
+__all__ = [
+    "analytical", "codesign",
+    "Accelerator", "Core", "MemoryLevel", "SIMDUnit",
+    "gap8", "multi_core_array", "pe_array_64x64", "tpu_v5e_like",
+    "GAResult", "heads_schedule", "optimize_allocation",
+    "ALL", "Requirement", "required_inputs",
+    "best_schedule", "explore", "fuse_all", "fuse_pv", "fuse_q_qkt",
+    "lbl", "select_schedule",
+    "ComputationNode", "split_layer", "split_workload",
+    "IllegalSchedule", "Result", "Schedule", "Stage", "evaluate",
+    "layer_by_layer",
+    "validate", "validate_all",
+    "INPUT", "WEIGHT", "Elementwise", "Layer", "LayerNorm", "MatMul",
+    "Softmax", "Transpose", "Workload", "attention_head", "cct_mhsa",
+    "mhsa", "parallel_heads",
+]

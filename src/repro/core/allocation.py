@@ -1,0 +1,128 @@
+"""Step 4 of Stream: genetic-algorithm layer(-group)-to-core allocation.
+
+The paper reuses Stream's GA unchanged ('a genetic algorithm optimizes
+which layer should be allocated to which core'; steps 4 and 5 iterate).
+For transformer workloads the natural allocation unit is the attention
+head — heads share no weights and, per Sec. IV.C.3, parallelise across
+cores with unchanged per-core memory gain.
+
+The GA genome maps head -> core; fitness is the Step-5 scheduler's
+latency (optionally blended with the max per-core feature-memory peak).
+Deterministic for a given seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Optional
+
+from repro.core import fusion
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import Accelerator
+
+
+def head_schedule(M: int, N: int, prefix: str, core: int,
+                  policy: str = "auto") -> list[sch.Stage]:
+    """Stages for one head under the given fusion policy."""
+    if policy == "auto":
+        policy = fusion.select_schedule(M, N)
+    builder = {
+        "lbl": lambda: fusion.lbl(prefix, core),
+        "fuse_q_qkt": lambda: fusion.fuse_q_qkt(prefix, core),
+        "fuse_pv": lambda: fusion.fuse_pv(prefix, core),
+    }[policy]
+    return list(builder().stages)
+
+
+def heads_schedule(M: int, N: int, allocation: tuple[int, ...],
+                   policy: str = "auto") -> sch.Schedule:
+    """Schedule a parallel_heads workload under a head->core allocation.
+
+    Stages are emitted head-major; the executor's per-resource timelines
+    make heads on different cores run concurrently.
+    """
+    stages: list[sch.Stage] = []
+    for h, core in enumerate(allocation):
+        stages.extend(head_schedule(M, N, f"h{h}.", core, policy))
+    return sch.Schedule(
+        name=f"heads[{policy}]@{allocation}", stages=tuple(stages))
+
+
+@dataclasses.dataclass
+class GAResult:
+    allocation: tuple[int, ...]
+    fitness: float
+    result: sch.Result
+    generations: int
+    evaluations: int
+
+
+def optimize_allocation(
+    M: int, N: int, n_heads: int, accel: Accelerator, *,
+    policy: str = "auto",
+    row_block: Optional[int] = None,
+    population: int = 16,
+    generations: int = 20,
+    mutation_rate: Optional[float] = None,
+    memory_weight: float = 0.0,
+    seed: int = 0,
+    fitness_fn: Optional[Callable[[sch.Result], float]] = None,
+) -> GAResult:
+    """Steps 4+5 iteration: evolve head->core allocations, scoring each
+    with the Step-5 scheduler."""
+    rng = random.Random(seed)
+    n_cores = accel.n_cores
+    workload = wl.parallel_heads(M, N, n_heads)
+    if row_block is None:
+        row_block = max(1, M // 64)
+    mutation_rate = mutation_rate or (1.0 / max(n_heads, 1))
+
+    cache: dict[tuple[int, ...], tuple[float, sch.Result]] = {}
+    evals = 0
+
+    def fitness(genome: tuple[int, ...]) -> tuple[float, sch.Result]:
+        nonlocal evals
+        if genome in cache:
+            return cache[genome]
+        schedule = heads_schedule(M, N, genome, policy)
+        res = sch.evaluate(workload, accel, schedule, row_block=row_block)
+        if fitness_fn is not None:
+            f = fitness_fn(res)
+        else:
+            mem = max(res.per_core_peak.values(), default=0)
+            f = res.latency_cycles + memory_weight * mem
+        cache[genome] = (f, res)
+        evals += 1
+        return f, res
+
+    def random_genome() -> tuple[int, ...]:
+        return tuple(rng.randrange(n_cores) for _ in range(n_heads))
+
+    # seed the population with the balanced round-robin plus randoms
+    pop = [tuple(h % n_cores for h in range(n_heads))]
+    while len(pop) < population:
+        pop.append(random_genome())
+
+    def tournament() -> tuple[int, ...]:
+        cands = [pop[rng.randrange(len(pop))] for _ in range(3)]
+        return min(cands, key=lambda g: fitness(g)[0])
+
+    for gen in range(generations):
+        scored = sorted(pop, key=lambda g: fitness(g)[0])
+        nxt = scored[:2]  # elitism
+        while len(nxt) < population:
+            a, b = tournament(), tournament()
+            child = tuple(a[i] if rng.random() < 0.5 else b[i]
+                          for i in range(n_heads))
+            child = tuple(
+                rng.randrange(n_cores) if rng.random() < mutation_rate
+                else c for c in child)
+            nxt.append(child)
+        pop = nxt
+
+    best = min(pop, key=lambda g: fitness(g)[0])
+    f, res = fitness(best)
+    return GAResult(allocation=best, fitness=f, result=res,
+                    generations=generations, evaluations=evals)

@@ -1,0 +1,96 @@
+"""Hardware/mapping co-design bridge: apply the paper's scheduling
+principle ('fuse through the largest intermediate; keep it out of the
+feature memory') to TPU kernel tiling.
+
+On TPU the analogue of the paper's L1 active-feature memory is VMEM
+residency inside a Pallas kernel.  The DSE picks (block_q, block_kv)
+tiles for the fused-attention kernels such that the fused working set
+fits the VMEM budget while keeping MXU dimensions hardware-aligned
+(multiples of 128) — the same optimisation Stream's step 3 performs for
+the PE array, re-expressed for the systolic MXU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MXU = 128                      # systolic tile edge; block dims align to it
+DEFAULT_VMEM_BUDGET_BYTES = 96 * 1024 * 1024  # leave headroom out of ~128MB
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionTiling:
+    block_q: int
+    block_kv: int
+    working_set_bytes: int
+    vmem_budget_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.working_set_bytes <= self.vmem_budget_bytes
+
+
+def fused_attention_working_set(block_q: int, block_kv: int, d_head: int,
+                                dtype_bytes: int = 2,
+                                acc_bytes: int = 4) -> int:
+    """VMEM words held live by one grid step of the fused (Fig. 5c-style)
+    kernel: Q tile + double-buffered K/V tiles + score tile + fp32 output
+    accumulator + softmax stats."""
+    q = block_q * d_head * dtype_bytes
+    kv = 2 * (2 * block_kv * d_head * dtype_bytes)   # K,V double-buffered
+    scores = block_q * block_kv * acc_bytes
+    out = block_q * d_head * acc_bytes
+    stats = 2 * block_q * acc_bytes
+    return q + kv + scores + out + stats
+
+
+def recommend_attention_tiling(
+    seq_q: int, seq_kv: int, d_head: int, *,
+    dtype_bytes: int = 2,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+    max_block: int = 1024,
+) -> AttentionTiling:
+    """Largest MXU-aligned (block_q, block_kv) whose fused working set
+    fits VMEM.  Bigger blocks amortise HBM streaming of K/V (the paper's
+    'memory term') against MXU occupancy."""
+    def clamp(b: int, seq: int) -> int:
+        b = min(b, max_block, max(seq, MXU))
+        return max(MXU, (b // MXU) * MXU)
+
+    block_q = clamp(512, seq_q)
+    block_kv = clamp(1024, seq_kv)
+    while True:
+        ws = fused_attention_working_set(block_q, block_kv, d_head,
+                                         dtype_bytes)
+        if ws <= vmem_budget_bytes or (block_q == MXU and block_kv == MXU):
+            return AttentionTiling(block_q, block_kv, ws, vmem_budget_bytes)
+        # shrink the dimension holding the larger share of the working set
+        if block_kv >= block_q and block_kv > MXU:
+            block_kv //= 2
+        elif block_q > MXU:
+            block_q //= 2
+        else:
+            block_kv //= 2
+        block_q, block_kv = max(block_q, MXU), max(block_kv, MXU)
+
+
+def hbm_traffic_unfused(M: int, N: int, dtype_bytes: int = 2) -> int:
+    """Bytes through HBM for the layer-by-layer score path: write+read of
+    the M x M score matrix dominates (the paper's stored intermediate)."""
+    scores = 2 * M * M * dtype_bytes           # write then read
+    qkv = 3 * M * N * dtype_bytes
+    out = M * N * dtype_bytes
+    return scores + qkv + out
+
+
+def hbm_traffic_fused(M: int, N: int, dtype_bytes: int = 2) -> int:
+    """Fused (Fig. 5c analogue): score matrix never leaves VMEM."""
+    qkv = 3 * M * N * dtype_bytes
+    out = M * N * dtype_bytes
+    return qkv + out
+
+
+def fused_traffic_gain(M: int, N: int) -> float:
+    """HBM-byte ratio fused/unfused — the TPU re-expression of the
+    paper's alpha: -> 2/(M/N) for M >> N (score traffic dominates)."""
+    return hbm_traffic_fused(M, N) / hbm_traffic_unfused(M, N)

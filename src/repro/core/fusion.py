@@ -1,0 +1,178 @@
+"""Layer-fusion schedules for attention heads (paper Sec. IV) and the
+schedule explorer that rediscovers them.
+
+Three named schedules (Fig. 5):
+
+* ``lbl``        — layer-by-layer, memory-optimal ordering (Fig. 5a).
+* ``fuse_q_qkt`` — fuse Q -> QK^T (optimal for M < N, Fig. 5b): rows of Q
+                   are consumed immediately and never stored.
+* ``fuse_pv``    — fuse QK^T -> softmax -> (QK^T)V (optimal for M > N,
+                   Fig. 5c): the M x M score matrix is never stored; the
+                   softmax runs on the SIMD core inside the pipeline.
+
+``explore`` enumerates the legal (ordering x fusion-group) space and
+evaluates each candidate with the Step-5 scheduler — the engine
+*rediscovers* the paper's optima rather than hard-coding them (tests
+assert the discovered peak equals analytical.a_lf / a_lbl).
+
+``select_schedule`` is the shape-driven decision rule the paper
+concludes with, reused by the runtime (models/attention.py) to pick the
+matching TPU kernel path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+from repro.core import analytical
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import Accelerator, pe_array_64x64
+
+
+def lbl(prefix: str = "", core: int = 0,
+        qkv_order: tuple[str, ...] = ("Q", "K", "V")) -> sch.Schedule:
+    """Fig. 5a (memory-optimal layer-by-layer).  The paper notes V and
+    QK^T may be swapped without changing latency or peak memory."""
+    p = prefix
+    names = [f"{p}{n}" for n in qkv_order] + [f"{p}QKT", f"{p}SM", f"{p}AV"]
+    return sch.Schedule(
+        name=f"lbl[{''.join(qkv_order)}]",
+        stages=tuple(sch.Stage(layers=(n,), core=core) for n in names),
+    )
+
+
+def fuse_q_qkt(prefix: str = "", core: int = 0) -> sch.Schedule:
+    """Fig. 5b (optimal for M < N): K first, then Q fused into QK^T
+    (Q streamed), then V, softmax, AV."""
+    p = prefix
+    return sch.Schedule(
+        name="fuse[Q->QKT]",
+        stages=(
+            sch.Stage(layers=(f"{p}K",), core=core),
+            sch.Stage(layers=(f"{p}Q", f"{p}QKT"),
+                      streamed=frozenset({(f"{p}Q", f"{p}QKT")}), core=core),
+            sch.Stage(layers=(f"{p}V",), core=core),
+            sch.Stage(layers=(f"{p}SM",), core=core),
+            sch.Stage(layers=(f"{p}AV",), core=core),
+        ),
+    )
+
+
+def fuse_pv(prefix: str = "", core: int = 0,
+            kvq_order: tuple[str, ...] = ("K", "V", "Q")) -> sch.Schedule:
+    """Fig. 5c (optimal for M > N): K, V, Q layer-by-layer, then
+    QK^T -> softmax -> .V fused (score rows streamed through the SIMD
+    core, one Q row substituted by one output row)."""
+    p = prefix
+    pre = tuple(sch.Stage(layers=(f"{p}{n}",), core=core)
+                for n in kvq_order)
+    fused = sch.Stage(
+        layers=(f"{p}QKT", f"{p}SM", f"{p}AV"),
+        streamed=frozenset({(f"{p}QKT", f"{p}SM"), (f"{p}SM", f"{p}AV")}),
+        core=core,
+    )
+    return sch.Schedule(name="fuse[QKT->SM->AV]", stages=pre + (fused,))
+
+
+def fuse_all(prefix: str = "", core: int = 0) -> sch.Schedule:
+    """The Fig. 5c-caption alternative: fuse Q, QK^T (and onwards) instead
+    of computing Q completely first."""
+    p = prefix
+    return sch.Schedule(
+        name="fuse[Q->QKT->SM->AV]",
+        stages=(
+            sch.Stage(layers=(f"{p}K",), core=core),
+            sch.Stage(layers=(f"{p}V",), core=core),
+            sch.Stage(
+                layers=(f"{p}Q", f"{p}QKT", f"{p}SM", f"{p}AV"),
+                streamed=frozenset({(f"{p}Q", f"{p}QKT"),
+                                    (f"{p}QKT", f"{p}SM"),
+                                    (f"{p}SM", f"{p}AV")}),
+                core=core,
+            ),
+        ),
+    )
+
+
+def candidates(prefix: str = "", core: int = 0) -> list[sch.Schedule]:
+    """The legal schedule space the explorer searches: QKV orderings for
+    LBL plus every fusion pattern."""
+    out: list[sch.Schedule] = []
+    for perm in itertools.permutations(("Q", "K", "V")):
+        out.append(lbl(prefix, core, qkv_order=perm))
+    out.append(fuse_q_qkt(prefix, core))
+    for perm in itertools.permutations(("K", "V", "Q")):
+        out.append(fuse_pv(prefix, core, kvq_order=perm))
+    out.append(fuse_all(prefix, core))
+    return out
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    schedule: sch.Schedule
+    result: sch.Result
+
+
+def explore(M: int, N: int, accel: Optional[Accelerator] = None,
+            row_block: Optional[int] = None,
+            latency_tolerance: float = 1.02) -> list[ExplorationResult]:
+    """Evaluate every candidate schedule for an M x N attention head and
+    return them sorted by (peak active memory, latency).
+
+    ``latency_tolerance``: the paper searches for fused schedules at the
+    *same optimal latency* as LBL; candidates slower than
+    tolerance x best-latency are dropped.
+    """
+    accel = accel or pe_array_64x64()
+    if row_block is None:
+        row_block = max(1, M // 256)  # keep node counts bounded for sweeps
+    head = wl.attention_head(M, N)
+    evals: list[ExplorationResult] = []
+    for cand in candidates():
+        try:
+            res = sch.evaluate(head, accel, cand, row_block=row_block)
+        except sch.IllegalSchedule:
+            continue
+        evals.append(ExplorationResult(cand, res))
+    if not evals:
+        raise sch.IllegalSchedule("no legal schedule found")
+    best_lat = min(e.result.latency_cycles for e in evals)
+    evals = [e for e in evals
+             if e.result.latency_cycles <= latency_tolerance * best_lat]
+    evals.sort(key=lambda e: (e.result.peak_active_words,
+                              e.result.latency_cycles))
+    return evals
+
+
+def best_schedule(M: int, N: int, **kw) -> ExplorationResult:
+    return explore(M, N, **kw)[0]
+
+
+# ---------------------------------------------------------------------------
+# The paper's shape-driven decision rule, exported to the runtime
+# ---------------------------------------------------------------------------
+
+def select_schedule(M: int, N: int) -> str:
+    """Paper take-away (Sec. IV.C.3): fuse through the largest
+    intermediate.  Returns one of 'fuse_q_qkt' | 'fuse_pv' | 'lbl'.
+
+    In LLM attention M = sequence length and N = head dim, so M >> N and
+    the M>N schedule — never materialise the M x M score matrix — is
+    selected; on TPU this lowers to the flash-style fused Pallas kernel
+    (kernels/fused_attention.py).  M < N selects Q-projection fusion
+    (kernels/fused_qproj_attention.py).  M == N has no memory gain
+    (Eq. 6/9) and keeps the unfused path.
+    """
+    if M > N:
+        return "fuse_pv"
+    if M < N:
+        return "fuse_q_qkt"
+    return "lbl"
+
+
+def predicted_alpha(M: int, N: int) -> float:
+    """alpha for the selected schedule (== analytical.alpha)."""
+    return analytical.alpha(M, N)

@@ -1,0 +1,304 @@
+"""Workload graph: the transformer layer types the paper adds to Stream.
+
+A ``Workload`` is a DAG of layers.  The attention head (paper Fig. 1)
+is described with 7 layers: 5 matrix-matrix multiplications (3x
+features x weights for Q/K/V, 2x features x features for QK^T and
+QK^T.V), one transpose and one (row-wise) softmax.
+
+Matmul dimension convention follows the paper (Sec. II.A):
+    I1 (R x S)  @  I2 (S x T)  ->  O (R x T)
+so for Q/K/V:  R=M, S=T=N;  for QK^T: R=T=M, S=N;  for (QK^T)V:
+R=S=M, T=N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+# Operand tags
+INPUT = "__input__"       # network input feature map
+WEIGHT = "__weight__"     # constant weights (not active *feature* data)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """Base layer: produces one output tensor of shape (rows, cols)."""
+
+    name: str
+    rows: int
+    cols: int
+
+    @property
+    def out_words(self) -> int:
+        return self.rows * self.cols
+
+    def feature_inputs(self) -> tuple[str, ...]:
+        raise NotImplementedError
+
+    def macs(self) -> int:
+        return 0
+
+    def vector_ops(self) -> int:
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MatMul(Layer):
+    """O(R,T) = I1(R,S) @ I2(S,T).  rows=R, cols=T.
+
+    ``i1``/``i2`` name the producing layer, or INPUT / WEIGHT.
+    The paper's novelty is supporting i2 as a *feature* operand
+    (QK^T and QK^T.V), not only weights.
+    """
+
+    s: int = 0
+    i1: str = INPUT
+    i2: str = WEIGHT
+
+    @property
+    def r(self) -> int:
+        return self.rows
+
+    @property
+    def t(self) -> int:
+        return self.cols
+
+    def feature_inputs(self) -> tuple[str, ...]:
+        out = []
+        if self.i1 != WEIGHT:
+            out.append(self.i1)
+        if self.i2 != WEIGHT:
+            out.append(self.i2)
+        return tuple(out)
+
+    def macs(self) -> int:
+        return self.rows * self.s * self.cols
+
+
+@dataclasses.dataclass(frozen=True)
+class Transpose(Layer):
+    """O(i,j) = I(j,i).  Input shape is (cols, rows).
+
+    ``materialize=False`` treats the transpose as a zero-copy view (the
+    paper's Fig. 5 traces count K and K^T as one tensor; on most
+    accelerators the transpose is realised by the access pattern).  The
+    dependency rule of Sec. II.C is modelled either way.
+    """
+
+    src: str = INPUT
+    materialize: bool = False
+
+    def feature_inputs(self) -> tuple[str, ...]:
+        return (self.src,)
+
+    def vector_ops(self) -> int:
+        return self.out_words if self.materialize else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Softmax(Layer):
+    """Row-wise softmax (paper Eq. 2): O(i,j) depends on ALL of input row i
+    (denominator), while exp() itself is elementwise."""
+
+    src: str = INPUT
+
+    def feature_inputs(self) -> tuple[str, ...]:
+        return (self.src,)
+
+    def vector_ops(self) -> int:
+        # exp + sum + divide per element ~ 3 vector ops / element
+        return 3 * self.out_words
+
+
+@dataclasses.dataclass(frozen=True)
+class Elementwise(Layer):
+    """Pointwise op (requant / GELU / residual-add): O(i,j) <- f(I(i,j))."""
+
+    src: str = INPUT
+    src2: Optional[str] = None
+    ops_per_element: int = 1
+
+    def feature_inputs(self) -> tuple[str, ...]:
+        return (self.src,) if self.src2 is None else (self.src, self.src2)
+
+    def vector_ops(self) -> int:
+        return self.ops_per_element * self.out_words
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm(Layer):
+    """Row-wise normalisation: like softmax, O(i, j) depends on all of
+    input row i (mean/variance), plus elementwise scale."""
+
+    src: str = INPUT
+
+    def feature_inputs(self) -> tuple[str, ...]:
+        return (self.src,)
+
+    def vector_ops(self) -> int:
+        return 4 * self.out_words
+
+
+@dataclasses.dataclass
+class Workload:
+    """A DAG of layers with a single external feature input of shape
+    (input_rows, input_cols)."""
+
+    name: str
+    input_rows: int
+    input_cols: int
+    layers: dict[str, Layer] = dataclasses.field(default_factory=dict)
+    # layers whose outputs must stay live at the end (feed the next block;
+    # the 'dot at the end' of the paper's Fig. 5 plots).
+    outputs: tuple[str, ...] = ()
+
+    def add(self, layer: Layer) -> Layer:
+        if layer.name in self.layers:
+            raise ValueError(f"duplicate layer {layer.name!r}")
+        for dep in layer.feature_inputs():
+            if dep not in (INPUT,) and dep not in self.layers:
+                raise ValueError(f"{layer.name!r} depends on unknown {dep!r}")
+        self.layers[layer.name] = layer
+        return layer
+
+    def topo_order(self) -> list[Layer]:
+        order: list[Layer] = []
+        done: set[str] = set()
+
+        def visit(name: str) -> None:
+            if name in done or name == INPUT:
+                return
+            layer = self.layers[name]
+            for dep in layer.feature_inputs():
+                visit(dep)
+            done.add(name)
+            order.append(layer)
+
+        for name in self.layers:
+            visit(name)
+        return order
+
+    def consumers(self, name: str) -> list[Layer]:
+        return [l for l in self.layers.values() if name in l.feature_inputs()]
+
+    def total_macs(self) -> int:
+        return sum(l.macs() for l in self.layers.values())
+
+    def total_vector_ops(self) -> int:
+        return sum(l.vector_ops() for l in self.layers.values())
+
+    @property
+    def input_words(self) -> int:
+        return self.input_rows * self.input_cols
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def attention_head(M: int, N: int, *, prefix: str = "",
+                   materialize_transpose: bool = False) -> Workload:
+    """The paper's single attention head (Fig. 1): input (M x N), weights
+    W_Q/W_K/W_V (N x N); 7 layers.  1/sqrt(d_k) is folded into W_Q
+    (paper Sec. II.A)."""
+    p = prefix
+    w = Workload(name=f"{p}attention_head_M{M}_N{N}",
+                 input_rows=M, input_cols=N)
+    w.add(MatMul(f"{p}Q", rows=M, cols=N, s=N, i1=INPUT, i2=WEIGHT))
+    w.add(MatMul(f"{p}K", rows=M, cols=N, s=N, i1=INPUT, i2=WEIGHT))
+    w.add(MatMul(f"{p}V", rows=M, cols=N, s=N, i1=INPUT, i2=WEIGHT))
+    w.add(Transpose(f"{p}KT", rows=N, cols=M, src=f"{p}K",
+                    materialize=materialize_transpose))
+    w.add(MatMul(f"{p}QKT", rows=M, cols=M, s=N, i1=f"{p}Q", i2=f"{p}KT"))
+    w.add(Softmax(f"{p}SM", rows=M, cols=M, src=f"{p}QKT"))
+    w.add(MatMul(f"{p}AV", rows=M, cols=N, s=M, i1=f"{p}SM", i2=f"{p}V"))
+    w.outputs = (f"{p}AV",)
+    return w
+
+
+def mhsa(M: int, d_model: int, n_heads: int, d_head: int, *,
+         output_projection: bool = True) -> Workload:
+    """Multi-head self attention: ``n_heads`` independent heads (the paper:
+    'every attention layer consists of multiple previously-described heads
+    in parallel') + optional output projection.
+
+    Head h projects the (M x d_model) input with (d_model x d_head)
+    weights; per-head attention matmuls use N=d_head.
+    """
+    w = Workload(name=f"mhsa_M{M}_D{d_model}_H{n_heads}x{d_head}",
+                 input_rows=M, input_cols=d_model)
+    head_outs = []
+    for h in range(n_heads):
+        p = f"h{h}."
+        w.add(MatMul(f"{p}Q", rows=M, cols=d_head, s=d_model,
+                     i1=INPUT, i2=WEIGHT))
+        w.add(MatMul(f"{p}K", rows=M, cols=d_head, s=d_model,
+                     i1=INPUT, i2=WEIGHT))
+        w.add(MatMul(f"{p}V", rows=M, cols=d_head, s=d_model,
+                     i1=INPUT, i2=WEIGHT))
+        w.add(Transpose(f"{p}KT", rows=d_head, cols=M, src=f"{p}K"))
+        w.add(MatMul(f"{p}QKT", rows=M, cols=M, s=d_head,
+                     i1=f"{p}Q", i2=f"{p}KT"))
+        w.add(Softmax(f"{p}SM", rows=M, cols=M, src=f"{p}QKT"))
+        w.add(MatMul(f"{p}AV", rows=M, cols=d_head, s=M,
+                     i1=f"{p}SM", i2=f"{p}V"))
+        head_outs.append(f"{p}AV")
+    if output_projection:
+        # Concat of heads -> (M x n_heads*d_head) @ (n_heads*d_head x d_model).
+        # Modelled as per-head partial projections accumulated elementwise;
+        # for cost purposes a single matmul consuming every head output.
+        prev = None
+        for h, ho in enumerate(head_outs):
+            name = f"proj{h}"
+            w.add(MatMul(name, rows=M, cols=d_model, s=d_head,
+                         i1=ho, i2=WEIGHT))
+            if prev is not None:
+                add = f"acc{h}"
+                w.add(Elementwise(add, rows=M, cols=d_model,
+                                  src=prev, src2=name))
+                prev = add
+            else:
+                prev = name
+        w.outputs = (prev,)
+    else:
+        w.outputs = tuple(head_outs)
+    return w
+
+
+def parallel_heads(M: int, N: int, n_heads: int) -> Workload:
+    """Sec. IV.C.3 multi-core setting: ``n_heads`` independent M x N
+    attention heads sharing the network input ('no inputs or weights are
+    typically shared among heads' — each core executes another head).
+    Outputs of every head stay live."""
+    w = Workload(name=f"heads{n_heads}_M{M}_N{N}",
+                 input_rows=M, input_cols=N)
+    outs = []
+    for h in range(n_heads):
+        p = f"h{h}."
+        w.add(MatMul(f"{p}Q", rows=M, cols=N, s=N, i1=INPUT, i2=WEIGHT))
+        w.add(MatMul(f"{p}K", rows=M, cols=N, s=N, i1=INPUT, i2=WEIGHT))
+        w.add(MatMul(f"{p}V", rows=M, cols=N, s=N, i1=INPUT, i2=WEIGHT))
+        w.add(Transpose(f"{p}KT", rows=N, cols=M, src=f"{p}K"))
+        w.add(MatMul(f"{p}QKT", rows=M, cols=M, s=N, i1=f"{p}Q",
+                     i2=f"{p}KT"))
+        w.add(Softmax(f"{p}SM", rows=M, cols=M, src=f"{p}QKT"))
+        w.add(MatMul(f"{p}AV", rows=M, cols=N, s=M, i1=f"{p}SM",
+                     i2=f"{p}V"))
+        outs.append(f"{p}AV")
+    w.outputs = tuple(outs)
+    return w
+
+
+def cct_mhsa(seq_len: int, *, n_heads: int = 8, d_model: int = 32,
+             d_head: int = 32) -> Workload:
+    """The Sec. III validation network: CCT-like MHSA, 32 embedding
+    channels, projection space 32, deployed at seq 81 and 128 on GAP8
+    (I-BERT integer ops; requant folded into utilization calibration).
+
+    MAC count = n_heads*(3*M*d_model*d_head + 2*M^2*d_head)
+                + M*(n_heads*d_head)*d_model
+    which for (81, 8, 32, 32) is ~6.01 MMAC -> measured 1.836 MCycles is
+    the paper's 'average of 3.2 MAC/cycle'.
+    """
+    return mhsa(seq_len, d_model=d_model, n_heads=n_heads, d_head=d_head)

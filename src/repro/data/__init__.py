@@ -1,0 +1,5 @@
+from repro.data.pipeline import (MemmapTokenDataset, SyntheticTokenDataset,
+                                 make_batch_iterator)
+
+__all__ = ["MemmapTokenDataset", "SyntheticTokenDataset",
+           "make_batch_iterator"]

@@ -1,0 +1,188 @@
+"""The paper's M<N layer-fused schedule (Fig. 5b: fuse Q -> QK^T) on TPU.
+
+When the query-row count is smaller than the embedding width (short
+sequences / decode microbatches vs wide models), the paper fuses the Q
+projection into the score computation so Q is *never stored*.  The TPU
+realisation: the kernel receives the pre-projection activations ``x``
+and the Q weights, computes the (block_q, d) Q tile in VMEM at the first
+kv step, and keeps it resident for the whole kv loop — Q never
+round-trips through HBM.  Active-memory saving vs the unfused path is
+exactly the paper's A_LBL - A_LF = M.N - M^2 words (Sec. IV.C.1).
+
+Backward reuses the fused_attention backward kernels on the recomputed
+Q tile plus two small projection GEMMs (dx, dWq).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import fused_attention as fa
+
+NEG_INF = fa.NEG_INF
+LANES = fa.LANES
+
+
+def _qproj_fwd_kernel(x_ref, wq_ref, k_ref, v_ref, o_ref, lse_ref,
+                      q_scr, acc_ref, m_ref, l_ref, *,
+                      causal: bool, scale: float, q_offset: int,
+                      kv_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+    bq = x_ref.shape[1]
+    bk = k_ref.shape[1]
+
+    @pl.when(kj == 0)
+    def _init():
+        # the fusion: Q tile built in VMEM, never written to HBM
+        q_scr[...] = jax.lax.dot_general(
+            x_ref[0], wq_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = True
+    if causal:
+        run = (q_offset + (qi + 1) * bq - 1) >= (kj * bk)
+
+    @pl.when(run)
+    def _body():
+        q = q_scr[...].astype(k_ref.dtype)
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = jnp.where(fa._causal_mask(bq, bk, qi, kj, q_offset),
+                          s, NEG_INF)
+        if kv_len % bk:
+            cols = kj * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols < kv_len, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == nk - 1)
+    def _emit():
+        l = l_ref[:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+
+
+def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
+               interpret):
+    b, sq, e = x.shape
+    eh, hq, d = wq.shape
+    assert eh == e
+    _, hkv, skv, dv = v.shape
+    group = hq // hkv
+    bq = min(block_q, fa._round_up(sq))
+    bk = min(block_k, fa._round_up(skv))
+    sq_p, skv_p = fa._pad_to(sq, bq), fa._pad_to(skv, bk)
+    nq, nk = sq_p // bq, skv_p // bk
+    xr = fa._pad_seq(x, sq_p, axis=1)
+    wqr = jnp.moveaxis(wq, 1, 0)                     # (Hq, E, D)
+    kr = fa._pad_seq(k.reshape(b * hkv, skv, d), skv_p)
+    vr = fa._pad_seq(v.reshape(b * hkv, skv, dv), skv_p)
+
+    kernel = functools.partial(
+        _qproj_fwd_kernel, causal=causal, scale=scale,
+        q_offset=(skv - sq) if q_offset is None else q_offset,
+        kv_len=skv)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, e),
+                         lambda h, i, j, hh=hq: (h // hh, i, 0)),
+            pl.BlockSpec((1, e, d),
+                         lambda h, i, j, hh=hq: (h % hh, 0, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, i, j, hh=hq, hk=hkv, g=group:
+                         ((h // hh) * hk + (h % hh) // g, j, 0)),
+            pl.BlockSpec((1, bk, dv),
+                         lambda h, i, j, hh=hq, hk=hkv, g=group:
+                         ((h // hh) * hk + (h % hh) // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dv), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, sq_p, dv), x.dtype),
+            jax.ShapeDtypeStruct((b * hq, sq_p), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xr, wqr, kr, vr)
+    o = o[:, :sq].reshape(b, hq, sq, dv)
+    lse = lse[:, :sq].reshape(b, hq, sq)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def fused_qproj_attention(x, wq, k, v, causal=True, scale=None,
+                          q_offset=None, block_q=256, block_k=512,
+                          interpret=False):
+    """Fig. 5b schedule: Q = x @ Wq fused into QK^T — Q never stored.
+
+    x: (B, Sq, E); wq: (E, Hq, D); k, v: (B, Hkv, Skv, D[v]).
+    """
+    scale_ = scale if scale is not None else wq.shape[-1] ** -0.5
+    o, _ = _qproj_fwd(x, wq, k, v, causal=causal, scale=scale_,
+                      q_offset=q_offset, block_q=block_q, block_k=block_k,
+                      interpret=interpret)
+    return o
+
+
+def _fqa_fwd(x, wq, k, v, causal, scale, q_offset, block_q, block_k,
+             interpret):
+    scale_ = scale if scale is not None else wq.shape[-1] ** -0.5
+    o, lse = _qproj_fwd(x, wq, k, v, causal=causal, scale=scale_,
+                        q_offset=q_offset, block_q=block_q,
+                        block_k=block_k, interpret=interpret)
+    return o, (x, wq, k, v, o, lse)
+
+
+def _fqa_bwd(causal, scale, q_offset, block_q, block_k, interpret, res, g):
+    x, wq, k, v, o, lse = res
+    scale_ = scale if scale is not None else wq.shape[-1] ** -0.5
+    # recompute Q (cheap GEMM) and reuse the fused-attention backward
+    q = jnp.einsum("bse,ehd->bhsd", x, wq).astype(x.dtype)
+    dq, dk, dv = fa._bwd((q, k, v, o, lse), g, causal=causal, scale=scale_,
+                         q_offset=q_offset, block_q=block_q,
+                         block_k=block_k, interpret=interpret)
+    dx = jnp.einsum("bhsd,ehd->bse", dq.astype(jnp.float32),
+                    wq.astype(jnp.float32)).astype(x.dtype)
+    dwq = jnp.einsum("bse,bhsd->ehd", x.astype(jnp.float32),
+                     dq.astype(jnp.float32)).astype(wq.dtype)
+    return dx, dwq, dk, dv
+
+
+fused_qproj_attention.defvjp(_fqa_fwd, _fqa_bwd)

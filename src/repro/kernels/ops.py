@@ -1,0 +1,164 @@
+"""Public kernel ops: schedule-aware dispatch wrappers.
+
+The paper's central result is that the optimal execution schedule of an
+attention head depends on its input shape (M vs N).  This module is
+where that decision meets the runtime:
+
+* ``attention``        — M > N regime (every assigned LM shape): the
+  Fig. 5c fused schedule.  Pallas kernel on TPU, lax fallback elsewhere.
+* ``qproj_attention``  — M < N regime (short-q / decode microbatches):
+  the Fig. 5b fused schedule (Q never stored).
+* ``schedule_for``     — the DSE engine's shape-driven selector
+  (core.fusion.select_schedule) exposed to model code.
+* ``ssd``/``ssd_step`` — Mamba-2 SSD chunked scan / decode update.
+
+Block sizes default from core.codesign.recommend_attention_tiling — the
+analytical engine's step-3 mapping optimisation choosing the kernel
+tiling (hardware/mapping co-design, per the paper's DSE methodology).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codesign
+from repro.core.fusion import select_schedule
+from repro.kernels import ref as _ref
+from repro.kernels import xla_fallback as _xla
+from repro.kernels.fused_attention import fused_attention as _pallas_attn
+from repro.kernels.fused_qproj_attention import (
+    fused_qproj_attention as _pallas_qproj_attn)
+from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
+from repro.kernels.xla_fallback import ssd_step  # re-export
+
+__all__ = ["attention", "qproj_attention", "ssd", "ssd_step",
+           "schedule_for", "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def schedule_for(seq_q: int, d_head: int) -> str:
+    """The paper's shape rule with M = query rows, N = head width.
+    'fuse_pv' (Fig. 5c) for M > N — train/prefill; 'fuse_q_qkt'
+    (Fig. 5b) for M < N — decode; 'lbl' at M == N."""
+    return select_schedule(seq_q, d_head)
+
+
+def _blocks(sq: int, skv: int, d: int, block_q, block_k):
+    if block_q is None or block_k is None:
+        t = codesign.recommend_attention_tiling(sq, skv, d)
+        block_q = block_q or t.block_q
+        block_k = block_k or t.block_kv
+    return block_q, block_k
+
+
+def attention(q, k, v, *, causal: bool = True,
+              scale: Optional[float] = None,
+              q_offset: Optional[int] = None,
+              lengths: Optional[jax.Array] = None,
+              impl: str = "auto",
+              block_q: Optional[int] = None,
+              block_k: Optional[int] = None,
+              interpret: bool = False):
+    """Layer-fused attention (paper Fig. 5c: QK^T -> softmax -> .V fused;
+    M x M scores never materialised).
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D[v]); GQA via Hq % Hkv == 0.
+    ``lengths``: (B,) valid kv prefix (decode w/ cache) — currently
+    routed to the lax path (scalar-prefetch Pallas variant is a tracked
+    §Perf item).
+    """
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
+    if impl == "auto":
+        impl = default_impl()
+    if lengths is not None and impl == "pallas":
+        impl = "xla"
+    if impl == "pallas":
+        return _pallas_attn(q, k, v, causal, scale, q_offset,
+                            block_q, block_k, interpret)
+    if impl == "xla":
+        return _xla.chunked_attention(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            lengths=lengths, block_q=block_q, block_k=block_k)
+    if impl == "reference":
+        return _ref.attention_reference(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            lengths=lengths)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def qproj_attention(x, wq, k, v, *, causal: bool = True,
+                    scale: Optional[float] = None,
+                    q_offset: Optional[int] = None,
+                    lengths: Optional[jax.Array] = None,
+                    impl: str = "auto",
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    interpret: bool = False):
+    """Layer-fused Q-projection attention (paper Fig. 5b: Q = x @ Wq fused
+    into QK^T — Q never stored).  x: (B, Sq, E); wq: (E, Hq, D)."""
+    b, sq, e = x.shape
+    d = wq.shape[-1]
+    skv = k.shape[2]
+    block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
+    if impl == "auto":
+        impl = default_impl()
+    if lengths is not None and impl == "pallas":
+        impl = "xla"
+    if impl == "pallas":
+        return _pallas_qproj_attn(x, wq, k, v, causal, scale, q_offset,
+                                  block_q, block_k, interpret)
+    q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+    if impl == "xla":
+        return _xla.chunked_attention(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            lengths=lengths, block_q=block_q, block_k=block_k)
+    if impl == "reference":
+        return _ref.attention_reference(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            lengths=lengths)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def ssd(x, dt, a, b, c, d=None, *, chunk: int = 128,
+        impl: str = "auto",
+        h0: Optional[jax.Array] = None,
+        return_final_state: bool = False,
+        interpret: bool = False):
+    """Mamba-2 SSD chunked scan.  The Pallas kernel is forward-only (the
+    serving path); training/backward uses the differentiable lax
+    implementation (identical math)."""
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "pallas" and h0 is None:
+        L = x.shape[1]
+        pad = (-L) % chunk
+        if pad:
+            x = _xla._pad_axis(x, L + pad, 1)
+            dt = _xla._pad_axis(dt, L + pad, 1)
+            b = _xla._pad_axis(b, L + pad, 1)
+            c = _xla._pad_axis(c, L + pad, 1)
+        out = _pallas_ssd(x, dt, a, b, c, d, chunk=chunk,
+                          interpret=interpret,
+                          return_final_state=return_final_state)
+        if pad:
+            if return_final_state:
+                y, h = out
+                return y[:, :L], h
+            return out[:, :L]
+        return out
+    if impl in ("xla", "pallas"):
+        return _xla.chunked_ssd(x, dt, a, b, c, d, chunk=chunk, h0=h0,
+                                return_final_state=return_final_state)
+    if impl == "reference":
+        return _ref.ssd_reference(x, dt, a, b, c, d, h0=h0,
+                                  return_final_state=return_final_state)
+    raise ValueError(f"unknown impl {impl!r}")

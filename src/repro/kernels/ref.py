@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the *layer-by-layer* (unfused) realisations of the paper's
+attention graph: they materialise the full M x M score matrix — exactly
+the schedule the paper's layer-fused execution avoids — and are used as
+the numerical ground truth for the fused Pallas kernels and the XLA
+chunked fallbacks.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, Hkv, S, D) -> (B, Hkv*n_rep, S, D) for GQA broadcast."""
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d)
+
+
+def attention_reference(
+    q: jax.Array,                   # (B, Hq, Sq, D)
+    k: jax.Array,                   # (B, Hkv, Skv, D)
+    v: jax.Array,                   # (B, Hkv, Skv, Dv)
+    *,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    lengths: Optional[jax.Array] = None,   # (B,) valid kv length per row
+    q_offset: Optional[int] = None,        # global position of q row 0
+    return_lse: bool = False,
+):
+    """Unfused attention: scores = QK^T fully materialised (the paper's
+    layer-by-layer schedule), then row softmax, then @V.
+
+    ``q_offset`` aligns causal masking when q is a suffix of the kv
+    sequence (decode/chunked prefill); default Skv - Sq.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    group = hq // hkv
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = None
+    if causal:
+        off = (skv - sq) if q_offset is None else q_offset
+        rows = off + jnp.arange(sq)[:, None]
+        cols = jnp.arange(skv)[None, :]
+        mask = cols <= rows                         # (Sq, Skv)
+        mask = mask[None, None]
+    if lengths is not None:
+        lmask = jnp.arange(skv)[None, :] < lengths[:, None]   # (B, Skv)
+        lmask = lmask[:, None, None, :]
+        mask = lmask if mask is None else (mask & lmask)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    o = o.astype(q.dtype)
+    if return_lse:
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]   # (B,Hq,Sq)
+        return o, lse
+    return o
+
+
+def qproj_attention_reference(
+    x: jax.Array,                   # (B, Sq, E) pre-projection activations
+    wq: jax.Array,                  # (E, Hq, D)
+    k: jax.Array,                   # (B, Hkv, Skv, D)
+    v: jax.Array,                   # (B, Hkv, Skv, D)
+    **kw,
+):
+    """The paper's M<N schedule, unfused oracle: materialise Q = x @ Wq in
+    full (the tensor the fused kernel never stores), then attention."""
+    q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+    return attention_reference(q, k, v, **kw)
+
+
+def softmax_reference(x: jax.Array) -> jax.Array:
+    """Row-wise softmax (paper Eq. 2)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def ssd_reference(
+    x: jax.Array,                   # (B, L, H, P)   head channels
+    dt: jax.Array,                  # (B, L, H)      positive step sizes
+    a: jax.Array,                   # (H,)           negative decay rate
+    b: jax.Array,                   # (B, L, G, S)   input projections
+    c: jax.Array,                   # (B, L, G, S)   output projections
+    d: Optional[jax.Array] = None,  # (H,) skip connection
+    *,
+    h0: Optional[jax.Array] = None,  # (B, H, P, S) initial state
+    return_final_state: bool = False,
+):
+    """Mamba-2 SSD (state-space duality) sequential-scan oracle.
+
+    h_t = exp(a * dt_t) * h_{t-1} + dt_t * x_t (outer) b_t
+    y_t = h_t . c_t + d * x_t
+
+    G SSM groups broadcast over H heads (H % G == 0).
+    """
+    B, L, H, P = x.shape
+    G, S = b.shape[2], b.shape[3]
+    rep = H // G
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)     # (B,L,H,S)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(a.astype(jnp.float32)[None, :] * dtf)   # (B,L,H)
+
+    def step(h, t):
+        # h: (B, H, P, S)
+        dec = decay[:, t][:, :, None, None]
+        upd = (xf[:, t] * dtf[:, t][..., None])[..., None] \
+            * bb[:, t][:, :, None, :]
+        h = h * dec + upd
+        y = jnp.einsum("bhps,bhs->bhp", h, cc[:, t])
+        return h, y
+
+    h = jnp.zeros((B, H, P, S), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    h, ys = jax.lax.scan(step, h, jnp.arange(L))
+    y = jnp.moveaxis(ys, 0, 1)                              # (B,L,H,P)
+    if d is not None:
+        y = y + d.astype(jnp.float32)[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    if return_final_state:
+        return y, h
+    return y

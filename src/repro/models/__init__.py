@@ -1,0 +1,9 @@
+from repro.models.common import (ModelConfig, Param, cross_entropy,
+                                 is_param, split_params)
+from repro.models.transformer import (forward, init_model,
+                                      init_model_cache,
+                                      init_params_and_axes)
+
+__all__ = ["ModelConfig", "Param", "cross_entropy", "is_param",
+           "split_params", "forward", "init_model", "init_model_cache",
+           "init_params_and_axes"]

@@ -1,0 +1,249 @@
+"""Attention blocks: GQA (qwen3/starcoder2/phi3.5/jamba/hubert/internvl2)
+and MLA (deepseek-v3), both dispatching to the paper's shape-selected
+fused schedule via kernels.ops.
+
+Schedule selection (the paper's contribution as a runtime feature):
+  * train/prefill: M = seq >> N = head_dim  -> Fig. 5c fused kernel
+    (ops.attention), score matrix never materialised;
+  * decode:        M = 1 << N              -> Fig. 5b regime; the Q
+    projection folds into the kernel (ops.qproj_attention) so Q never
+    hits HBM.  `use_qproj_fusion` applies it when legal (no qk-norm —
+    norm between projection and scores breaks the fusion; noted).
+
+KV caches: GQA stores (k, v) per layer; MLA stores the *latent* cache
+(c_kv + rope key), decoding in absorbed form — (B, S, 576) instead of
+(B, H, S, 192+128): the MLA memory win integrates naturally with the
+fused kernel because fused_attention supports d_v != d_k.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models.common import ModelConfig, param, ones_param, rms_norm, rope
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": param(ks[0], (d, h, dh), ("embed", "heads", "head_dim"),
+                    cfg.pdtype),
+        "wk": param(ks[1], (d, hk, dh), ("embed", "kv_heads", "head_dim"),
+                    cfg.pdtype),
+        "wv": param(ks[2], (d, hk, dh), ("embed", "kv_heads", "head_dim"),
+                    cfg.pdtype),
+        "wo": param(ks[3], (h, dh, d), ("heads", "head_dim", "embed"),
+                    cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_param((dh,), ("head_dim",), cfg.pdtype)
+        p["k_norm"] = ones_param((dh,), ("head_dim",), cfg.pdtype)
+    return p
+
+
+def gqa_forward(params, cfg: ModelConfig, x, positions, *,
+                cache: Optional[dict] = None,
+                cache_len: Optional[jax.Array] = None,
+                interpret: bool = False):
+    """x: (B, S, D).  With cache: append k/v at cache_len, attend over
+    the valid prefix (decode / chunked prefill)."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    decode = cache is not None
+
+    def project_kv():
+        k = jnp.einsum("bsd,dhe->bhse", x, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhe->bhse", x, params["wv"].astype(dt))
+        if cfg.qk_norm:
+            k = rms_norm(k, params["k_norm"])
+        k = rope(k, positions, cfg.rope_theta)
+        return k, v
+
+    k_new, v_new = project_kv()
+    k_new = constrain(k_new, "batch", "kv_heads", "seq", "head_dim")
+    v_new = constrain(v_new, "batch", "kv_heads", "seq", "head_dim")
+
+    q = jnp.einsum("bsd,dhe->bhse", x, params["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", "seq", "head_dim")
+
+    if decode:
+        # write new kv at cache_len (same position for all rows)
+        k_buf = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype),
+            (0, 0, cache_len, 0))
+        v_buf = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype),
+            (0, 0, cache_len, 0))
+        new_cache = {"k": k_buf, "v": v_buf}
+        lengths = jnp.full((b,), cache_len + s, jnp.int32)
+        from repro.sharding import rules as _shrules
+        if cfg.distributed_decode and s == 1 \
+                and _shrules._current()[0] is not None:
+            from repro.serve.distributed_decode import \
+                distributed_decode_attention
+            o = distributed_decode_attention(
+                q, k_buf.astype(dt), v_buf.astype(dt), lengths)
+        else:
+            o = ops.attention(q, k_buf.astype(dt), v_buf.astype(dt),
+                              causal=cfg.causal, q_offset=cache_len,
+                              lengths=lengths,
+                              impl=cfg.attn_impl,
+                              block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k,
+                              interpret=interpret)
+    else:
+        new_cache = None
+        o = ops.attention(q, k_new, v_new, causal=cfg.causal,
+                          impl=cfg.attn_impl,
+                          block_q=cfg.attn_block_q,
+                          block_k=cfg.attn_block_k,
+                          interpret=interpret)
+    o = constrain(o, "batch", "heads", "seq", "head_dim")
+    out = jnp.einsum("bhse,hed->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> dict:
+    hk, dh = cfg.kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, hk, max_len, dh), dtype),
+            "v": jnp.zeros((batch, hk, max_len, dh), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    d_nope, d_rope, d_v = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                           cfg.v_head_dim)
+    ks = jax.random.split(key, 9)
+    return {
+        "wq_a": param(ks[0], (d, r_q), ("embed", "latent"), cfg.pdtype),
+        "q_a_norm": ones_param((r_q,), ("latent",), cfg.pdtype),
+        "wq_b": param(ks[1], (r_q, h, d_nope + d_rope),
+                      ("latent", "heads", "head_dim"), cfg.pdtype),
+        "wkv_a": param(ks[2], (d, r_kv + d_rope), ("embed", "latent"),
+                       cfg.pdtype),
+        "kv_a_norm": ones_param((r_kv,), ("latent",), cfg.pdtype),
+        "wk_b": param(ks[3], (r_kv, h, d_nope),
+                      ("latent", "heads", "head_dim"), cfg.pdtype),
+        "wv_b": param(ks[4], (r_kv, h, d_v),
+                      ("latent", "heads", "head_dim"), cfg.pdtype),
+        "wo": param(ks[5], (h, d_v, d), ("heads", "head_dim", "embed"),
+                    cfg.pdtype),
+    }
+
+
+def _mla_q(params, cfg, x, positions, dt):
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dt))
+    cq = rms_norm(cq, params["q_a_norm"])
+    q = jnp.einsum("bsr,rhe->bhse", cq, params["wq_b"].astype(dt))
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, cfg, x, positions, dt):
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    c, k_rope = (ckv[..., :cfg.kv_lora_rank],
+                 ckv[..., cfg.kv_lora_rank:])
+    c = rms_norm(c, params["kv_a_norm"])
+    k_rope = rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    return c, k_rope  # (B,S,r_kv), (B,S,d_rope)
+
+
+def mla_forward(params, cfg: ModelConfig, x, positions, *,
+                cache: Optional[dict] = None,
+                cache_len: Optional[jax.Array] = None,
+                interpret: bool = False):
+    """Prefill/train: non-absorbed (per-head K/V, fused kernel, causal).
+    Decode: absorbed MQA form over the latent cache (d_k = r_kv + rope,
+    d_v = r_kv) — one shared latent 'kv head'."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(params, cfg, x, positions, dt)
+    c, k_rope = _mla_latent(params, cfg, x, positions, dt)
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhe->bhse", c, params["wk_b"].astype(dt))
+        v = jnp.einsum("bsr,rhe->bhse", c, params["wv_b"].astype(dt))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, None],
+                                      (b, cfg.n_heads, s,
+                                       cfg.qk_rope_head_dim))], axis=-1)
+        scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+        o = ops.attention(q, k, v, causal=cfg.causal, scale=scale,
+                          impl=cfg.attn_impl, block_q=cfg.attn_block_q,
+                          block_k=cfg.attn_block_k, interpret=interpret)
+        new_cache = None
+    else:
+        # absorbed: q' = q_nope @ W_UK -> latent space
+        q_lat = jnp.einsum("bhse,rhe->bhsr", q_nope,
+                           params["wk_b"].astype(dt))
+        q_full = jnp.concatenate([q_lat, q_rope], axis=-1)
+        latent_new = jnp.concatenate([c, k_rope], axis=-1)
+        buf = jax.lax.dynamic_update_slice(
+            cache["latent"], latent_new.astype(cache["latent"].dtype),
+            (0, cache_len, 0))
+        new_cache = {"latent": buf}
+        k_lat = buf.astype(dt)[:, None]                  # (B,1,S,r+rope)
+        v_lat = buf.astype(dt)[:, None, :, :cfg.kv_lora_rank]
+        lengths = jnp.full((b,), cache_len + s, jnp.int32)
+        scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+        o_lat = ops.attention(q_full, k_lat, v_lat, causal=cfg.causal,
+                              q_offset=cache_len,
+                              scale=scale, lengths=lengths,
+                              impl=cfg.attn_impl,
+                              block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k,
+                              interpret=interpret)      # (B,H,S,r_kv)
+        o = jnp.einsum("bhsr,rhe->bhse", o_lat, params["wv_b"].astype(dt))
+
+    out = jnp.einsum("bhse,hed->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> dict:
+    width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    return {"latent": jnp.zeros((batch, max_len, width), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    return init_mla(key, cfg) if cfg.attention == "mla" \
+        else init_gqa(key, cfg)
+
+
+def attention_forward(params, cfg, x, positions, **kw):
+    if cfg.attention == "mla":
+        return mla_forward(params, cfg, x, positions, **kw)
+    return gqa_forward(params, cfg, x, positions, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.attention == "mla":
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    return init_gqa_cache(cfg, batch, max_len, dtype)

@@ -1,0 +1,124 @@
+"""Mamba-2 block (SSD) — mamba2-130m and the Mamba layers of
+jamba-1.5-large.
+
+Attention-free: the paper's attention-head fusion is inapplicable
+(DESIGN.md §Arch-applicability); the SSD scan is nevertheless executed
+with the same fuse-through-the-largest-intermediate schedule (chunk
+states stay in VMEM — kernels/ssd_scan.py).
+
+Block: in_proj -> [z | xBC | dt]; causal depthwise conv on xBC; SSD on
+(x, B, C, dt); gated by silu(z); RMSNorm; out_proj.
+Decode caches: conv tail (width-1 last inputs) + SSM state (H, P, S).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import ModelConfig, ones_param, param, rms_norm
+from repro.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.inner_dim
+    heads = cfg.ssm_heads or (d_in // cfg.ssm_head_dim)
+    p = d_in // heads
+    return d_in, heads, p, cfg.ssm_groups, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, h, p_dim, g, s = _dims(cfg)
+    conv_dim = d_in + 2 * g * s
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": param(ks[0], (d, 2 * d_in + 2 * g * s + h),
+                         ("embed", "inner"), cfg.pdtype),
+        "conv_w": param(ks[1], (cfg.conv_width, conv_dim),
+                        ("conv", "inner"), cfg.pdtype, scale=0.5),
+        "conv_b": param(ks[2], (conv_dim,), ("inner",), cfg.pdtype,
+                        scale=0.01),
+        "a_log": param(ks[3], (h,), ("ssm_heads",), jnp.float32,
+                       scale=1.0),
+        "d_skip": ones_param((h,), ("ssm_heads",), jnp.float32),
+        "dt_bias": param(ks[4], (h,), ("ssm_heads",), jnp.float32,
+                         scale=0.5),
+        "norm": ones_param((d_in,), ("inner",), cfg.pdtype),
+        "out_proj": param(ks[5], (d_in, d), ("inner", "embed"),
+                          cfg.pdtype),
+    }
+
+
+def _conv1d(xbc, w, b, cache: Optional[jax.Array]):
+    """Causal depthwise conv, width W.  xbc: (B, L, C); w: (W, C).
+    cache: (B, W-1, C) previous tail or None."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = cache.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)           # (B, L+W-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i][None, None]
+              for i in range(width))
+    new_cache = full[:, -(width - 1):]
+    return out + b[None, None], new_cache
+
+
+def mamba_forward(params, cfg: ModelConfig, x, *,
+                  cache: Optional[dict] = None,
+                  interpret: bool = False):
+    """x: (B, L, D).  With cache (decode): L==1 single-step update."""
+    dt_ = x.dtype
+    b, l, _ = x.shape
+    d_in, h, p_dim, g, s = _dims(cfg)
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dt_))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * g * s]
+    dt_raw = zxbcdt[..., -h:]
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _conv1d(xbc, params["conv_w"].astype(dt_),
+                            params["conv_b"].astype(dt_), conv_cache)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(dt_)
+    xs = xbc[..., :d_in].reshape(b, l, h, p_dim)
+    bmat = xbc[..., d_in:d_in + g * s].reshape(b, l, g, s)
+    cmat = xbc[..., d_in + g * s:].reshape(b, l, g, s)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    a = -jnp.exp(params["a_log"])
+
+    if cache is not None and l == 1:
+        y, new_state = ops.ssd_step(
+            xs[:, 0], dt[:, 0], a, bmat[:, 0], cmat[:, 0],
+            params["d_skip"], cache["ssm"])
+        y = y[:, None]                                    # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": new_state}
+    elif cache is not None:
+        # chunked prefill: seed the scan with the cached state
+        y, new_state = ops.ssd(
+            xs, dt.astype(dt_), a, bmat, cmat, params["d_skip"],
+            chunk=cfg.ssd_chunk, impl="xla", h0=cache["ssm"],
+            return_final_state=True, interpret=interpret)
+        new_cache = {"conv": new_conv, "ssm": new_state}
+    else:
+        y = ops.ssd(xs, dt.astype(dt_), a, bmat, cmat, params["d_skip"],
+                    chunk=cfg.ssd_chunk, interpret=interpret)
+        new_cache = None
+    y = y.reshape(b, l, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = rms_norm(y, params["norm"])
+    y = constrain(y, "batch", "seq", "inner")
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, h, p_dim, g, s = _dims(cfg)
+    conv_dim = d_in + 2 * g * s
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                              dtype),
+            "ssm": jnp.zeros((batch, h, p_dim, s), jnp.float32)}

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule)
+from repro.optim.compression import (compress_decompress, error_feedback_init,
+                                     int8_compress_with_feedback)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_schedule",
+           "compress_decompress", "error_feedback_init",
+           "int8_compress_with_feedback"]

@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce at 1000+-node scale).
+
+Under SPMD/pjit the gradient reduction itself is emitted by XLA, so the
+compression is expressed as a *representable* transform: quantise the
+gradient to int8 (per-tensor scale), keep the quantisation residual in
+an error-feedback buffer that is added back next step.  On a real
+multi-pod deployment this transform sits on the slow inter-pod axis
+(hierarchical reduce: full-precision reduce-scatter intra-pod, int8
+all-reduce across pods); in-process we verify convergence behaviour and
+the error-feedback invariant (tests/test_optim.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def error_feedback_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g):
+    """int8 round-trip of one tensor (the wire format)."""
+    q, scale = _quant_int8(g.astype(jnp.float32))
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_with_feedback(grads, feedback):
+    """g' = Q(g + e);  e' = (g + e) - g'   (error feedback keeps the
+    compression unbiased over time)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        sent = compress_decompress(corrected)
+        return sent.astype(g.dtype), corrected - sent
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(feedback)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

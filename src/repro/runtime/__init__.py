@@ -1,0 +1,5 @@
+from repro.runtime.elastic import (ElasticRunner, StepTimer,
+                                   remesh_state, run_with_restarts)
+
+__all__ = ["ElasticRunner", "StepTimer", "remesh_state",
+           "run_with_restarts"]

@@ -1,0 +1,7 @@
+from repro.serve.engine import (DecodeState, decode_step, greedy_sample,
+                                init_decode_state, prefill, serve_step)
+from repro.serve.batcher import Request, RequestBatcher
+
+__all__ = ["DecodeState", "decode_step", "greedy_sample",
+           "init_decode_state", "prefill", "serve_step",
+           "Request", "RequestBatcher"]

@@ -1,0 +1,78 @@
+"""Continuous-batching request scheduler (host-side serving loop).
+
+Slots of a fixed decode batch are assigned to requests as they arrive;
+finished rows (EOS or max tokens) free their slot for the next queued
+request.  The device-side state is one DecodeState; per-slot lengths
+live host-side.  Straggler note: at multi-host scale the batcher runs
+on host 0 and broadcasts slot assignments with the token batch — decode
+steps stay SPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list
+    max_new_tokens: int = 32
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class RequestBatcher:
+    def __init__(self, batch_size: int, eos_id: int = -1):
+        self.batch_size = batch_size
+        self.eos_id = eos_id
+        self.queue: deque = deque()
+        self.slots: list = [None] * batch_size
+        self.finished: list = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> list:
+        newly = []
+        for i in range(self.batch_size):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+                newly.append(i)
+        return newly
+
+    @property
+    def active(self) -> bool:
+        return any(s is not None for s in self.slots) or bool(self.queue)
+
+    def step(self, next_tokens: np.ndarray) -> None:
+        """Feed back one decoded token per slot."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(next_tokens[i])
+            req.generated.append(tok)
+            if tok == self.eos_id or \
+                    len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+
+    def run(self, prefill_fn: Callable, decode_fn: Callable,
+            max_steps: int = 1000) -> list:
+        """Drive the loop: prefill_fn(slot_ids, prompts) seeds caches,
+        decode_fn() -> (B,) next tokens."""
+        steps = 0
+        while self.active and steps < max_steps:
+            new_slots = self._fill_slots()
+            if new_slots:
+                prefill_fn(new_slots,
+                           [self.slots[i].prompt for i in new_slots])
+            toks = decode_fn()
+            self.step(np.asarray(toks))
+            steps += 1
+        return self.finished

@@ -1,0 +1,100 @@
+"""Distributed layer-fused decode (§Perf optimization 'flash decoding').
+
+Baseline decode shards the KV cache's TIME dimension over the model
+axis; XLA then broadcasts every kv block to every shard (collective-
+bound — see EXPERIMENTS.md §Roofline).  This module instead runs the
+paper's fused schedule *per shard* and combines the shards' partial
+online-softmax states — the (m, l, o) triple that the Fig. 5c schedule
+streams through the SIMD core becomes the *only* cross-chip traffic:
+
+    per shard:  o_i = sum_j exp(s_ij - m_i) v_j ;  (m_i, l_i)
+    combine  :  m* = max_i m_i ;  o = sum_i exp(m_i - m*) o_i
+                                      / sum_i exp(m_i - m*) l_i
+
+Exact (not approximate): softmax is associative under this combine.
+Traffic per step drops from O(cache/model_shards) broadcast to
+O(B * H * D) partials — about four orders of magnitude at 32k context.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules as shrules
+
+NEG_INF = -1e30
+
+
+def _local_partial(q, k, v, first_col, lengths, scale):
+    """Partial attention over this shard's kv columns.
+    q: (B,H,S1,D) replicated; k,v: (B,Hkv,Sl,D); returns (o, m, l)."""
+    b, hq, sq, d = q.shape
+    hkv, sl = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group * sq, d).astype(jnp.float32)
+    s = jnp.einsum("bngd,bnkd->bngk", qg, k.astype(jnp.float32)) * scale
+    cols = first_col + jnp.arange(sl)
+    valid = cols[None, :] < lengths[:, None]               # (B, Sl)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                # (B,Hkv,G*S1)
+    p = jnp.exp(s - m[..., None])
+    # fully-masked shard: make its contribution exactly zero
+    dead = m <= NEG_INF / 2
+    p = jnp.where(dead[..., None], 0.0, p)
+    m = jnp.where(dead, NEG_INF, m)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bngk,bnkd->bngd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def distributed_decode_attention(
+    q: jax.Array,            # (B, Hq, S1, D) — S1 = 1..few
+    k: jax.Array,            # (B, Hkv, S, D)  seq sharded over `axis`
+    v: jax.Array,
+    lengths: jax.Array,      # (B,)
+    *,
+    scale: Optional[float] = None,
+    axis: str = "model",
+) -> jax.Array:
+    """Exact attention over a sequence-sharded cache with partial-softmax
+    combination across `axis`.  Requires an active mesh (sharding.rules
+    context); falls back to the caller's path otherwise."""
+    mesh = shrules._current()[0]
+    b, hq, sq, d = q.shape
+    hkv, seq = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    scale = scale if scale is not None else d ** -0.5
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    sl = seq // n_shards
+    group = hq // hkv
+
+    def per_shard(q, k, v, lengths):
+        bl = q.shape[0]                     # local batch
+        idx = jax.lax.axis_index(axis)
+        o, m, l = _local_partial(q, k, v, idx * sl, lengths, scale)
+        m_star = jax.lax.pmax(m, axis)
+        w = jnp.exp(m - m_star)
+        o = jax.lax.psum(o * w[..., None], axis)
+        l = jax.lax.psum(l * w, axis)
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (o / l[..., None]).reshape(bl, hq, sq, dv)
+        return out.astype(q.dtype)
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else \
+        (batch_axes[0] if batch_axes else None)
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, None, axis, None),
+                  P(bspec, None, axis, None),
+                  P(bspec)),
+        out_specs=P(bspec, None, None, None),
+        check_rep=False)
+    return fn(q, k, v, lengths)

@@ -1,0 +1,73 @@
+"""Serving: prefill + decode with per-layer caches.
+
+Decode is the paper's M<N regime (one query row vs wide embeddings):
+the schedule selector picks the Fig. 5b fusion — Q folded into the
+score kernel — while prefill (M>N) uses the Fig. 5c fused kernel.
+Caches: GQA k/v ring, MLA latent (B,S,576), Mamba conv+state.
+
+``serve_step`` is what the dry-run lowers for decode_* shapes: one new
+token against a seq_len-deep cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeState:
+    cache: Any
+    cache_len: jax.Array          # scalar int32: filled prefix length
+    last_token: jax.Array         # (B,) int32
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    return DecodeState(
+        cache=tf.init_model_cache(cfg, batch, max_len, dtype),
+        cache_len=jnp.zeros((), jnp.int32),
+        last_token=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def greedy_sample(logits) -> jax.Array:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def prefill(params, cfg: ModelConfig, tokens, state: DecodeState, *,
+            embeds=None, interpret: bool = False) -> DecodeState:
+    """Run the prompt through the model, filling the caches."""
+    logits, new_cache = tf.forward(
+        params, cfg, tokens=tokens, embeds=embeds, cache=state.cache,
+        cache_len=0, interpret=interpret)
+    s = logits.shape[1]
+    return DecodeState(cache=new_cache,
+                       cache_len=jnp.asarray(s, jnp.int32),
+                       last_token=greedy_sample(logits))
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
+                interpret: bool = False) -> tuple[DecodeState, jax.Array]:
+    """One token for every row (M=1: the paper's M<N schedule regime)."""
+    logits, new_cache = tf.forward(
+        params, cfg, tokens=state.last_token[:, None],
+        cache=state.cache, cache_len=state.cache_len,
+        interpret=interpret)
+    nxt = greedy_sample(logits)
+    return DecodeState(cache=new_cache, cache_len=state.cache_len + 1,
+                       last_token=nxt), logits[:, -1]
+
+
+def serve_step(params, cfg: ModelConfig, state: DecodeState, *,
+               interpret: bool = False) -> DecodeState:
+    """The dry-run entry point: decode_step without returning logits."""
+    new_state, _ = decode_step(params, cfg, state, interpret=interpret)
+    return new_state

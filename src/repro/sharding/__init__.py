@@ -1,0 +1,6 @@
+from repro.sharding.rules import (DEFAULT_RULES, constrain, logical_sharding,
+                                  logical_to_mesh_axes, param_shardings,
+                                  set_rules_for_mesh)
+
+__all__ = ["DEFAULT_RULES", "constrain", "logical_sharding",
+           "logical_to_mesh_axes", "param_shardings", "set_rules_for_mesh"]

@@ -1,0 +1,5 @@
+from repro.train.step import (TrainState, init_train_state, loss_fn,
+                              make_train_step, train_step)
+
+__all__ = ["TrainState", "init_train_state", "loss_fn", "make_train_step",
+           "train_step"]

@@ -1,0 +1,119 @@
+"""Training step: loss -> grad -> AdamW, with optional gradient
+accumulation (microbatching) and gradient compression.
+
+The step is a pure function, pjit-compiled by launch/train.py with
+parameter shardings from the model's logical axes and batch sharding
+over (pod, data).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.optim import adamw_init, adamw_update, int8_compress_with_feedback
+from repro.optim.adamw import AdamWState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    feedback: Optional[Any] = None     # error-feedback buffers (compression)
+
+
+def init_train_state(key, cfg: cm.ModelConfig, *,
+                     moment_dtype: str = "float32",
+                     grad_compression: bool = False) -> tuple:
+    """Returns (state, logical_axes_tree_for_params)."""
+    params, axes = tf.init_params_and_axes(key, cfg)
+    opt = adamw_init(params, moment_dtype)
+    fb = None
+    if grad_compression:
+        from repro.optim import error_feedback_init
+        fb = error_feedback_init(params)
+    return TrainState(params=params, opt=opt, feedback=fb), axes
+
+
+def loss_fn(params, cfg: cm.ModelConfig, batch, *,
+            interpret: bool = False):
+    """Next-token cross entropy (+ MoE aux).  batch: {"tokens": (B,S+1)}
+    or {"tokens", "embeds"} for stub-frontend archs."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    if tokens is not None and cfg.causal:
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    else:
+        inputs, targets = tokens, batch.get("targets", tokens)
+    logits, aux = tf.forward(
+        params, cfg, tokens=inputs, embeds=embeds,
+        interpret=interpret, return_aux=True)
+    if embeds is not None and tokens is not None:
+        # VLM: loss on the text suffix only
+        logits = logits[:, -targets.shape[1]:]
+    mask = batch.get("mask")
+    loss = cm.cross_entropy(logits, targets, mask)
+    total = loss + 0.01 * aux["moe_lb_loss"] + 0.001 * aux["moe_z_loss"]
+    metrics = {"loss": loss, "moe_lb_loss": aux["moe_lb_loss"],
+               "moe_z_loss": aux["moe_z_loss"]}
+    return total, metrics
+
+
+def train_step(state: TrainState, batch, cfg: cm.ModelConfig, *,
+               lr=3e-4, weight_decay: float = 0.1,
+               microbatches: int = 1,
+               interpret: bool = False) -> tuple:
+    """One optimizer step.  ``microbatches`` > 1 accumulates gradients
+    over leading-batch slices (sequential, remat-friendly)."""
+    params = state.params
+
+    def grads_of(b):
+        (tot, metrics), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, b, interpret=interpret),
+            has_aux=True)(params)
+        return g, metrics
+
+    if microbatches > 1:
+        def mb_slice(i, b):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatches),
+                    x.shape[0] // microbatches, 0), b)
+
+        def body(carry, i):
+            acc, _ = carry
+            g, m = grads_of(mb_slice(i, batch))
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, m), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        (gsum, metrics), _ = jax.lax.scan(
+            body, (zero, {"loss": 0.0, "moe_lb_loss": 0.0,
+                          "moe_z_loss": 0.0}),
+            jnp.arange(microbatches))
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+    else:
+        grads, metrics = grads_of(batch)
+
+    feedback = state.feedback
+    if feedback is not None:
+        grads, feedback = int8_compress_with_feedback(grads, feedback)
+
+    new_params, new_opt, opt_metrics = adamw_update(
+        params, grads, state.opt, lr=lr, weight_decay=weight_decay)
+    metrics = dict(metrics, **opt_metrics)
+    return TrainState(params=new_params, opt=new_opt,
+                      feedback=feedback), metrics
+
+
+def make_train_step(cfg: cm.ModelConfig, **kw) -> Callable:
+    """Closure suitable for jax.jit(..., donate_argnums=0)."""
+    return functools.partial(train_step, cfg=cfg, **kw)

@@ -1,0 +1,198 @@
+"""Stream-engine tests: the paper's Step 1/2 extensions, Fig. 5 memory
+traces, Eqs. 3-9, iso-latency, schedule exploration, GA allocation."""
+
+import pytest
+
+from repro.core import analytical as an
+from repro.core import dependencies as deps
+from repro.core import fusion
+from repro.core import nodes as cn
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import multi_core_array, pe_array_64x64
+from repro.core.allocation import heads_schedule, optimize_allocation
+
+
+# ---------------------------------------------------------------- step 1
+def test_split_matmul_rows():
+    layer = wl.MatMul("m", rows=8, cols=4, s=4)
+    nodes = cn.split_layer(layer, row_block=1)
+    assert len(nodes) == 8
+    assert all(n.macs == 16 for n in nodes)          # 4*4 per row
+    assert nodes[3].row_start == 3 and nodes[3].row_end == 4
+
+
+def test_split_view_transpose_has_no_nodes():
+    t = wl.Transpose("t", rows=4, cols=8, src=wl.INPUT)
+    assert cn.split_layer(t) == []
+    t2 = wl.Transpose("t", rows=4, cols=8, src=wl.INPUT, materialize=True)
+    assert len(cn.split_layer(t2)) == 4
+
+
+# ---------------------------------------------------------------- step 2
+def _head(M=8, N=4):
+    return wl.attention_head(M, N)
+
+
+def test_dependency_rules_matmul():
+    """Fig. 3: O(i,j) needs row i of I1 and column j of I2 (=> all of a
+    feature I2 for a row-split node)."""
+    head = _head()
+    reqs = {r.producer: r.region
+            for r in deps.required_inputs(head, "QKT", 2, 3)}
+    assert reqs["Q"] == (2, 3)            # row range of left operand
+    assert reqs["K"] == deps.ALL          # K^T view resolved to all of K
+
+
+def test_dependency_rules_softmax_rowwise():
+    """Softmax: output row i depends on ALL of input row i (Eq. 2's
+    denominator) but not on other rows."""
+    head = _head()
+    reqs = {r.producer: r.region
+            for r in deps.required_inputs(head, "SM", 5, 6)}
+    assert reqs == {"QKT": (5, 6)}
+
+
+def test_dependency_rules_transpose():
+    """Transpose: output (i,j) <- input (j,i); at row granularity an
+    output-row node touches every input row."""
+    w = wl.Workload("t", input_rows=4, input_cols=8)
+    w.add(wl.Transpose("T", rows=8, cols=4, src=wl.INPUT,
+                       materialize=True))
+    reqs = deps.required_inputs(w, "T", 0, 1)
+    assert reqs[0].producer == wl.INPUT and reqs[0].region == deps.ALL
+
+
+def test_node_dependencies_explicit_edges():
+    head = _head(M=4, N=4)
+    split = cn.split_workload(head)
+    edges = deps.node_dependencies(head, split, "QKT", 1, 2)
+    names = {(e.layer, e.row_start) for e in edges}
+    assert ("Q", 1) in names
+    assert all(("Q", r) not in names for r in (0, 2, 3))
+    assert {("K", r) for r in range(4)} <= names     # all of K (via view)
+
+
+# ------------------------------------------------------------- Fig5/Eqs
+ACCEL = pe_array_64x64()
+SHAPES = [(128, 512), (512, 128), (256, 256), (128, 1024), (1024, 128)]
+
+
+@pytest.mark.parametrize("M,N", SHAPES)
+def test_lbl_peak_matches_analytical(M, N):
+    res = sch.evaluate(wl.attention_head(M, N), ACCEL, fusion.lbl(),
+                       row_block=max(1, M // 64))
+    assert res.peak_active_words == an.a_lbl(M, N)
+
+
+@pytest.mark.parametrize("M,N", SHAPES)
+def test_lf_peak_matches_analytical(M, N):
+    sched = fusion.fuse_q_qkt() if M < N else fusion.fuse_pv()
+    res = sch.evaluate(wl.attention_head(M, N), ACCEL, sched,
+                       row_block=max(1, M // 64))
+    assert res.peak_active_words == an.a_lf(M, N)
+
+
+@pytest.mark.parametrize("M,N", SHAPES)
+def test_iso_latency(M, N):
+    """The paper's central claim: layer fusion at UNCHANGED latency."""
+    rb = max(1, M // 64)
+    head = wl.attention_head(M, N)
+    lat_lbl = sch.evaluate(head, ACCEL, fusion.lbl(), row_block=rb) \
+        .latency_cycles
+    sched = fusion.fuse_q_qkt() if M < N else fusion.fuse_pv()
+    lat_lf = sch.evaluate(head, ACCEL, sched, row_block=rb).latency_cycles
+    assert lat_lf <= lat_lbl * 1.001
+
+
+def test_paper_examples():
+    """Sec. IV.C numbers: 128x1024 -> alpha=(2N+M)/3N~0.708 ('~0.711,
+    29% reduction'); 1024x128 -> alpha=0.3 (70% reduction)."""
+    assert an.alpha(128, 1024) == pytest.approx(0.7083, abs=1e-3)
+    assert an.alpha(1024, 128) == pytest.approx(0.3, abs=1e-9)
+    assert an.alpha_limit_flat() == pytest.approx(2 / 3)
+
+
+def test_explorer_rediscovers_paper_optima():
+    """Steps 4/5 search finds the Fig. 5b / 5c / LBL optima by itself."""
+    assert fusion.explore(128, 1024)[0].schedule.name == "fuse[Q->QKT]"
+    assert fusion.explore(1024, 128)[0].schedule.name \
+        == "fuse[QKT->SM->AV]"
+    best_sq = fusion.explore(256, 256)[0]
+    assert best_sq.result.peak_active_words == an.a_lbl(256, 256)
+
+
+def test_select_schedule_rule():
+    assert fusion.select_schedule(4096, 128) == "fuse_pv"
+    assert fusion.select_schedule(1, 128) == "fuse_q_qkt"
+    assert fusion.select_schedule(128, 128) == "lbl"
+
+
+def test_memory_trace_shape_lbl():
+    """Fig. 5a plateau structure: starts at MN, peaks at A_LBL, ends at
+    MN (the output stays active)."""
+    M, N = 256, 256
+    res = sch.evaluate(wl.attention_head(M, N), ACCEL, fusion.lbl(),
+                       row_block=4)
+    words = [w for _, w in res.trace]
+    assert words[0] == M * N
+    assert max(words) == an.a_lbl(M, N)
+    assert words[-1] == M * N
+
+
+def test_illegal_schedule_raises():
+    """AV before its producers must be rejected by the Step-2 checks."""
+    bad = sch.Schedule(name="bad", stages=(
+        sch.Stage(layers=("AV",)), sch.Stage(layers=("Q",)),
+        sch.Stage(layers=("K",)), sch.Stage(layers=("V",)),
+        sch.Stage(layers=("QKT",)), sch.Stage(layers=("SM",))))
+    with pytest.raises(sch.IllegalSchedule):
+        sch.evaluate(wl.attention_head(64, 64), ACCEL, bad, row_block=8)
+
+
+def test_streamed_edge_requires_same_stage():
+    with pytest.raises(sch.IllegalSchedule):
+        sch.Stage(layers=("Q",), streamed=frozenset({("Q", "QKT")}))
+
+
+# ------------------------------------------------------------ multicore
+def test_multicore_alpha_identical():
+    """Sec. IV.C.3: per-core gain on multi-core == single-core alpha."""
+    M, N = 512, 128
+    mc = multi_core_array(4)
+    w = wl.parallel_heads(M, N, 4)
+    lbl = sch.evaluate(w, mc, heads_schedule(M, N, (0, 1, 2, 3), "lbl"),
+                       row_block=8)
+    lf = sch.evaluate(w, mc, heads_schedule(M, N, (0, 1, 2, 3), "auto"),
+                      row_block=8)
+    for c in range(4):
+        assert lf.per_core_peak[c] / lbl.per_core_peak[c] \
+            == pytest.approx(an.alpha(M, N), rel=1e-6)
+
+
+def test_multicore_speedup():
+    M, N = 256, 128
+    mc = multi_core_array(4)
+    w = wl.parallel_heads(M, N, 4)
+    one = sch.evaluate(w, mc, heads_schedule(M, N, (0, 0, 0, 0), "auto"),
+                       row_block=8).latency_cycles
+    four = sch.evaluate(w, mc, heads_schedule(M, N, (0, 1, 2, 3), "auto"),
+                        row_block=8).latency_cycles
+    assert four <= one / 3.5
+
+
+def test_ga_finds_balanced_allocation():
+    mc = multi_core_array(4)
+    res = optimize_allocation(256, 128, n_heads=8, accel=mc,
+                              generations=8, population=12, row_block=16)
+    from collections import Counter
+    assert sorted(Counter(res.allocation).values()) == [2, 2, 2, 2]
+
+
+def test_energy_scaled_improves_with_fusion():
+    """Sec. IV.C.3: smaller peak memory -> lower scaled access energy."""
+    M, N = 1024, 128
+    head = wl.attention_head(M, N)
+    e_lbl = sch.evaluate(head, ACCEL, fusion.lbl(), row_block=16)
+    e_lf = sch.evaluate(head, ACCEL, fusion.fuse_pv(), row_block=16)
+    assert e_lf.energy_scaled_pj < e_lbl.energy_scaled_pj

@@ -1,0 +1,39 @@
+"""Section III validation: our engine vs the paper's published GAP8
+measurements and Stream estimates."""
+
+import pytest
+
+from repro.core import analytical as an
+from repro.core import validation
+
+
+def test_mac_counts():
+    """6.01 / 12.58 MMAC reproduce the measured 'average of 3.2
+    MAC/cycle' at 1.836 MCycles."""
+    m81 = an.mhsa_macs(81, 32, 8, 32)
+    m128 = an.mhsa_macs(128, 32, 8, 32)
+    assert m81 == 6_013_440
+    assert m128 == 12_582_912
+    assert m81 / 1.836e6 == pytest.approx(3.2, abs=0.1)
+    # the 128:81 scaling ratio equals the ratio of the paper's estimates
+    assert m128 / m81 == pytest.approx(3.540 / 1.692, abs=2e-3)
+
+
+@pytest.mark.parametrize("seq,stream_est,measured,max_dev", [
+    (81, 1.692, 1.836, 0.10),
+    (128, 3.540, 3.905, 0.11),
+])
+def test_gap8_validation(seq, stream_est, measured, max_dev):
+    v = validation.validate(seq)
+    # within 1% of the paper's own Stream estimate
+    assert v.modeled_mcycles == pytest.approx(stream_est, rel=0.01)
+    # and the same 8-9% deviation vs the hardware measurement
+    assert v.deviation_vs_measured < max_dev
+    assert v.deviation_vs_measured > 0.05
+
+
+def test_validation_latency_scaling():
+    """Latency must scale like the MAC count (structure, not fit)."""
+    v81, v128 = validation.validate_all()
+    ratio = v128.modeled_mcycles / v81.modeled_mcycles
+    assert ratio == pytest.approx(12_582_912 / 6_013_440, rel=1e-3)

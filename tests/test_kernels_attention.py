@@ -1,0 +1,143 @@
+"""Pallas fused-attention kernels vs the pure-jnp oracle (ref.py),
+interpret=True on CPU, swept over shapes/dtypes/GQA/causality —
+plus the lax fallbacks used by the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_attention import fused_attention
+from repro.kernels.fused_qproj_attention import fused_qproj_attention
+
+KEYS = jax.random.split(jax.random.PRNGKey(7), 8)
+
+
+def _qkv(b, hq, hkv, sq, skv, d, dtype=jnp.float32, dv=None):
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(KEYS[1], (b, hkv, skv, d), dtype)
+    v = jax.random.normal(KEYS[2], (b, hkv, skv, dv or d), dtype)
+    return q, k, v
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+SWEEP = [
+    # b, hq, hkv, sq, skv, d, causal, dtype
+    (1, 1, 1, 128, 128, 64, False, jnp.float32),
+    (2, 4, 2, 256, 256, 64, True, jnp.float32),
+    (1, 8, 2, 128, 384, 128, True, jnp.float32),     # GQA group 4
+    (2, 4, 4, 100, 300, 64, True, jnp.float32),      # uneven + pad
+    (1, 4, 1, 256, 256, 64, True, jnp.float32),      # MQA
+    (2, 4, 2, 256, 256, 64, True, jnp.bfloat16),
+    (1, 2, 2, 64, 512, 32, False, jnp.float32),      # dv != d below
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,dtype", SWEEP)
+def test_fused_attention_forward(b, hq, hkv, sq, skv, d, causal, dtype):
+    q, k, v = _qkv(b, hq, hkv, sq, skv, d, dtype)
+    o = fused_attention(q, k, v, causal, None, None, 128, 128, True)
+    o_ref = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               **_tol(dtype))
+
+
+def test_fused_attention_dv_neq_dk():
+    """MLA absorbed decode relies on d_v != d_k."""
+    q, k, v = _qkv(1, 4, 1, 64, 256, 96, dv=64)
+    o = fused_attention(q, k, v, False, None, None, 64, 128, True)
+    o_ref = ref.attention_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("group", [1, 2])
+def test_fused_attention_grads(causal, group):
+    q, k, v = _qkv(2, 2 * group, 2, 128, 128, 64)
+
+    def lf(q, k, v):
+        return (fused_attention(q, k, v, causal, None, None, 64, 64,
+                                True) ** 2).sum()
+
+    def lr(q, k, v):
+        return (ref.attention_reference(q, k, v, causal=causal) ** 2).sum()
+
+    g1 = jax.grad(lf, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 256), (256, 128)])
+def test_block_size_invariance(bq, bk):
+    """The result must not depend on the VMEM tiling (pure schedule)."""
+    q, k, v = _qkv(1, 2, 2, 256, 512, 64)
+    o = fused_attention(q, k, v, True, None, None, bq, bk, True)
+    o_ref = ref.attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+
+def test_qproj_fusion_forward_and_grads():
+    """Fig. 5b kernel: Q never materialised; same numerics as the
+    unfused oracle that does materialise it."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (2, 128, 192)) * 0.2
+    wq = jax.random.normal(ks[1], (192, 4, 64)) * 0.05
+    k = jax.random.normal(ks[2], (2, 2, 256, 64))
+    v = jax.random.normal(ks[3], (2, 2, 256, 64))
+    o = fused_qproj_attention(x, wq, k, v, True, None, None, 64, 128,
+                              True)
+    o_ref = ref.qproj_attention_reference(x, wq, k, v, causal=True)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+    g1 = jax.grad(lambda *A: (fused_qproj_attention(
+        *A, True, None, None, 64, 128, True) ** 2).sum(),
+        argnums=(0, 1, 2, 3))(x, wq, k, v)
+    g2 = jax.grad(lambda *A: (ref.qproj_attention_reference(
+        *A, causal=True) ** 2).sum(), argnums=(0, 1, 2, 3))(x, wq, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ lax path
+def test_xla_chunked_matches_ref_with_lengths():
+    q, k, v = _qkv(3, 4, 2, 64, 256, 64)
+    lengths = jnp.array([100, 256, 17])
+    o1 = ops.attention(q, k, v, causal=False, lengths=lengths,
+                       impl="xla", block_q=32, block_k=64)
+    o2 = ops.attention(q, k, v, causal=False, lengths=lengths,
+                       impl="reference")
+    np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+
+
+def test_xla_chunked_grad_matches_ref():
+    q, k, v = _qkv(1, 2, 2, 96, 96, 32)
+    g1 = jax.grad(lambda q: (ops.attention(
+        q, k, v, causal=True, impl="xla", block_q=32,
+        block_k=32) ** 2).sum())(q)
+    g2 = jax.grad(lambda q: (ops.attention(
+        q, k, v, causal=True, impl="reference") ** 2).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-4)
+
+
+def test_traced_q_offset_decode_alignment():
+    """Decode semantics: q_offset aligns causal masking when q is a
+    suffix of the kv sequence."""
+    q, k, v = _qkv(1, 2, 2, 1, 64, 32)
+    full_q = jax.random.normal(KEYS[3], (1, 2, 64, 32))
+    full = ref.attention_reference(full_q, k, v, causal=True)
+    o = ops.attention(full_q[:, :, -1:], k, v, causal=True,
+                      q_offset=63, lengths=jnp.array([64]), impl="xla")
+    np.testing.assert_allclose(o[:, :, 0], full[:, :, -1],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_schedule_selector_regimes():
+    assert ops.schedule_for(32768, 128) == "fuse_pv"     # prefill/train
+    assert ops.schedule_for(1, 128) == "fuse_q_qkt"      # decode

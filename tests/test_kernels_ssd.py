@@ -1,0 +1,101 @@
+"""SSD chunked-scan kernel vs the sequential-scan oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _inputs(B, L, H, P, G, S, key=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    x = jax.random.normal(ks[0], (B, L, H, P), dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))) * 0.1) \
+        .astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = (jax.random.normal(ks[3], (B, L, G, S)) * 0.3).astype(dtype)
+    c = (jax.random.normal(ks[4], (B, L, G, S)) * 0.3).astype(dtype)
+    d = jax.random.normal(ks[5], (H,))
+    return x, dt, a, b, c, d
+
+
+SWEEP = [
+    # B, L, H, P, G, S, chunk
+    (1, 64, 1, 64, 1, 64, 32),
+    (2, 256, 4, 64, 2, 128, 64),
+    (1, 128, 8, 32, 4, 64, 128),   # single chunk
+    (2, 96, 2, 64, 1, 32, 32),    # L % chunk == 0
+]
+
+
+@pytest.mark.parametrize("B,L,H,P,G,S,chunk", SWEEP)
+def test_ssd_kernel_matches_ref(B, L, H, P, G, S, chunk):
+    x, dt, a, b, c, d = _inputs(B, L, H, P, G, S)
+    y, h = ssd_scan(x, dt, a, b, c, d, chunk=chunk, interpret=True,
+                    return_final_state=True)
+    yr, hr = ref.ssd_reference(x, dt, a, b, c, d, return_final_state=True)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h, hr, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_bf16():
+    x, dt, a, b, c, d = _inputs(1, 128, 2, 64, 1, 64,
+                                dtype=jnp.bfloat16)
+    y = ssd_scan(x, dt, a, b, c, d, chunk=64, interpret=True)
+    yr = ref.ssd_reference(x, dt, a, b, c, d)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(L=st.sampled_from([32, 96, 160]),
+       chunk=st.sampled_from([16, 32, 64]),
+       H=st.sampled_from([1, 2, 4]))
+def test_ssd_xla_chunk_invariance(L, chunk, H):
+    """Output must be independent of the chunk size (pure schedule)."""
+    x, dt, a, b, c, d = _inputs(1, L, H, 32, 1, 32, key=L + chunk)
+    y1 = ops.ssd(x, dt, a, b, c, d, chunk=chunk, impl="xla")
+    y2 = ops.ssd(x, dt, a, b, c, d, impl="reference")
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_grads_xla_vs_ref():
+    x, dt, a, b, c, d = _inputs(1, 64, 2, 32, 1, 32)
+    g1 = jax.grad(lambda x: (ops.ssd(x, dt, a, b, c, d, chunk=32,
+                                     impl="xla") ** 2).sum())(x)
+    g2 = jax.grad(lambda x: (ops.ssd(x, dt, a, b, c, d,
+                                     impl="reference") ** 2).sum())(x)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_state_continuation():
+    """Chunked-prefill contract: scan(L) == scan(L/2) + scan(L/2, h0)."""
+    x, dt, a, b, c, d = _inputs(1, 128, 2, 32, 1, 32)
+    y_full, h_full = ops.ssd(x, dt, a, b, c, d, chunk=32, impl="xla",
+                             return_final_state=True)
+    y1, h1 = ops.ssd(x[:, :64], dt[:, :64], a, b[:, :64], c[:, :64], d,
+                     chunk=32, impl="xla", return_final_state=True)
+    y2, h2 = ops.ssd(x[:, 64:], dt[:, 64:], a, b[:, 64:], c[:, 64:], d,
+                     chunk=32, impl="xla", h0=h1,
+                     return_final_state=True)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h2, h_full, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_step_chain_matches_scan():
+    """Decode contract: T single-token steps == one scan of length T."""
+    B, L, H, P, G, S = 2, 8, 2, 16, 1, 16
+    x, dt, a, b, c, d = _inputs(B, L, H, P, G, S)
+    y_ref = ref.ssd_reference(x, dt, a, b, c, d)
+    h = jnp.zeros((B, H, P, S))
+    outs = []
+    for t in range(L):
+        y, h = ops.ssd_step(x[:, t], dt[:, t], a, b[:, t], c[:, t], d, h)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.stack(outs, 1), y_ref,
+                               rtol=1e-4, atol=1e-4)

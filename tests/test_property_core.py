@@ -1,0 +1,80 @@
+"""Hypothesis property tests on the DSE engine's invariants."""
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical as an
+from repro.core import fusion
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import pe_array_64x64
+
+ACCEL = pe_array_64x64()
+dims = st.sampled_from([64, 128, 192, 256, 384, 512])
+
+
+@settings(max_examples=15, deadline=None)
+@given(M=dims, N=dims)
+def test_engine_matches_closed_forms(M, N):
+    """For every (M, N) in the paper's regime (multiples of 64) the
+    scheduler's peaks equal Eqs. in Sec. IV; alpha <= 1 always."""
+    rb = max(1, M // 64)
+    head = wl.attention_head(M, N)
+    lbl = sch.evaluate(head, ACCEL, fusion.lbl(), row_block=rb)
+    assert lbl.peak_active_words == an.a_lbl(M, N)
+    sched = {"fuse_q_qkt": fusion.fuse_q_qkt(), "fuse_pv": fusion.fuse_pv(),
+             "lbl": fusion.lbl()}[fusion.select_schedule(M, N)]
+    lf = sch.evaluate(head, ACCEL, sched, row_block=rb)
+    assert lf.peak_active_words == an.a_lf(M, N)
+    assert lf.peak_active_words <= lbl.peak_active_words
+
+
+@settings(max_examples=15, deadline=None)
+@given(M=dims, N=dims)
+def test_memory_trace_invariants(M, N):
+    """Active memory is never negative, starts at the input size and
+    ends at the output size (liveness conservation)."""
+    rb = max(1, M // 64)
+    res = sch.evaluate(wl.attention_head(M, N), ACCEL, fusion.lbl(),
+                       row_block=rb)
+    words = [w for _, w in res.trace]
+    assert all(w >= 0 for w in words)
+    assert words[0] == M * N
+    assert words[-1] == M * N                 # output stays active
+    times = [t for t, _ in res.trace]
+    assert times == sorted(times)
+
+
+@settings(max_examples=15, deadline=None)
+@given(M=dims, N=dims)
+def test_macs_invariant_under_schedule(M, N):
+    """Fusion changes memory, never arithmetic."""
+    rb = max(1, M // 64)
+    head = wl.attention_head(M, N)
+    r1 = sch.evaluate(head, ACCEL, fusion.lbl(), row_block=rb)
+    r2 = sch.evaluate(head, ACCEL, fusion.fuse_pv(), row_block=rb)
+    assert r1.macs == r2.macs == an.attention_head_macs(M, N)
+
+
+@settings(max_examples=10, deadline=None)
+@given(M=dims, N=dims, rb=st.sampled_from([1, 2, 4, 8]))
+def test_peak_independent_of_row_block(M, N, rb):
+    """Node granularity must not change the peak (uniform frees)."""
+    head = wl.attention_head(M, N)
+    a = sch.evaluate(head, ACCEL, fusion.lbl(), row_block=rb)
+    b = sch.evaluate(head, ACCEL, fusion.lbl(),
+                     row_block=max(1, M // 64))
+    assert a.peak_active_words == b.peak_active_words
+
+
+@settings(max_examples=20, deadline=None)
+@given(ratio=st.integers(min_value=-4, max_value=4))
+def test_alpha_curve_monotone(ratio):
+    """Fig. 6: alpha improves monotonically away from M == N."""
+    N = 256
+    M = N * (2 ** ratio) if ratio >= 0 else N // (2 ** -ratio)
+    a = an.alpha(M, N)
+    assert 0 < a <= 1
+    if M != N:
+        closer = an.alpha((M + N) // 2 if M > N else M * 2, N)
+        assert a <= closer + 1e-12
