@@ -1,0 +1,41 @@
+"""§Engine: scheduler-engine throughput — nodes-scheduled/sec of the
+event-driven executor on an 8-head 4-core workload, so future PRs can
+track DSE-engine speed alongside the paper figures."""
+
+import time
+
+from repro.core import nodes as cn
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import multi_core_array
+from repro.core.allocation import heads_schedule
+
+M, N, HEADS, CORES, ROW_BLOCK = 256, 128, 8, 4, 4
+
+
+def run() -> list:
+    accel = multi_core_array(CORES)
+    workload = wl.parallel_heads(M, N, HEADS)
+    alloc = tuple(h % CORES for h in range(HEADS))
+    schedule = heads_schedule(M, N, alloc, "auto")
+    n_nodes = sum(len(v) for v in
+                  cn.split_workload(workload, ROW_BLOCK).values())
+    # warm-up outside the timed region (first call pays import costs)
+    sch.evaluate(workload, accel, schedule, row_block=ROW_BLOCK)
+    t0 = time.perf_counter()
+    res = sch.evaluate(workload, accel, schedule, row_block=ROW_BLOCK)
+    dt = time.perf_counter() - t0
+    return [{
+        "name": f"engine_{HEADS}h_{CORES}c_M{M}",
+        "nodes": n_nodes,
+        "nodes_per_sec": round(n_nodes / dt),
+        "eval_ms": round(dt * 1e3, 2),
+        "latency_cycles": res.latency_cycles,
+        "comm_cycles": res.comm_cycles,
+        "comm_energy_pj": res.comm_energy_pj,
+    }]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

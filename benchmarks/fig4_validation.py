@@ -16,6 +16,7 @@ def run() -> list:
             "dev_vs_measured": round(v.deviation_vs_measured, 4),
             "macs": v.macs,
             "mac_per_cycle": round(v.macs_per_cycle, 3),
+            "comm_cycles": v.comm_cycles,
         })
     return rows
 

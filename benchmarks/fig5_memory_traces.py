@@ -31,6 +31,7 @@ def run() -> list:
                 "start_words": words[0],
                 "end_words": words[-1],
                 "latency_cycles": res.latency_cycles,
+                "comm_cycles": res.comm_cycles,
                 "a_lbl": an.a_lbl(M, N),
                 "a_lf": an.a_lf(M, N),
                 "trace_points": len(words),

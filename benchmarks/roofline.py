@@ -8,8 +8,14 @@ import json
 import os
 
 from repro import configs
+from repro.core import costmodel
+from repro.core.accelerator import tpu_v5e_like
 
-HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+# Roofline constants derived from the accelerator description (single
+# source of truth shared with the DSE engine's cost model) instead of a
+# hand-maintained parallel table: ~197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s/link ICI.
+HW = costmodel.hw_constants(tpu_v5e_like(), word_bytes=2)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun.json")
@@ -138,11 +144,12 @@ def run() -> list:
         hlo_total = r["per_device"]["flops"] * n_dev
         if corrected:
             # compute term from exact-arithmetic analytic flops
-            rt["compute"] = analytic_flops(arch, shape) / n_dev \
-                / HW["peak_flops"]
+            rt["compute"] = costmodel.compute_seconds(
+                analytic_flops(arch, shape) / n_dev, HW["peak_flops"])
         dominant = max(rt, key=rt.get)
         bound = max(rt.values())
-        useful_time = mf / n_dev / HW["peak_flops"]
+        useful_time = costmodel.compute_seconds(mf / n_dev,
+                                                HW["peak_flops"])
         rows.append({
             "name": f"roofline_{arch}_{shape}",
             "compute_s": round(rt["compute"], 5),

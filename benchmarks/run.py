@@ -10,12 +10,12 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig4_validation, fig5_memory_traces,
-                            fig6_alpha, kernel_bench, roofline,
-                            tableI_features)
+    from benchmarks import (engine_bench, fig4_validation,
+                            fig5_memory_traces, fig6_alpha, kernel_bench,
+                            roofline, tableI_features)
     print("name,us_per_call,derived")
     for mod in (fig4_validation, fig5_memory_traces, fig6_alpha,
-                tableI_features, kernel_bench, roofline):
+                tableI_features, engine_bench, kernel_bench, roofline):
         t0 = time.perf_counter()
         rows = mod.run()
         us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)

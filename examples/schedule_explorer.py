@@ -26,7 +26,8 @@ def alpha_curve():
 
 
 def ga_allocation():
-    print("\nSteps 4+5 — GA head->core allocation (8 heads, 4 cores):")
+    print("\nSteps 4+5 — GA head->core allocation (8 heads, 4 cores),\n"
+          "communication booked on the interconnect:")
     res = optimize_allocation(256, 128, n_heads=8,
                               accel=multi_core_array(4),
                               generations=10, population=12,
@@ -34,6 +35,20 @@ def ga_allocation():
     print(f"  allocation: {res.allocation}")
     print(f"  latency: {res.result.latency_cycles:.0f} cycles; "
           f"per-core peaks: {res.result.per_core_peak}")
+    print(f"  communication: {res.result.comm_cycles:.0f} link cycles, "
+          f"{res.result.comm_energy_pj:.0f} pJ; link utilization: "
+          + ", ".join(f"{k}={v:.1%}"
+                      for k, v in sorted(res.result.link_utilization
+                                         .items())))
+
+
+def multicore_explore():
+    print("\nMulti-head multi-core exploration (4 heads, 4 cores):")
+    for e in fusion.explore(256, 128, accel=multi_core_array(4),
+                            n_heads=4, row_block=8)[:3]:
+        print(f"  {e.schedule.name:24s} latency={e.result.latency_cycles:7.0f} "
+              f"peak={e.result.peak_active_words:7d} "
+              f"comm={e.result.comm_cycles:5.0f}")
 
 
 def tpu_codesign():
@@ -51,4 +66,5 @@ def tpu_codesign():
 if __name__ == "__main__":
     alpha_curve()
     ga_allocation()
+    multicore_explore()
     tpu_codesign()

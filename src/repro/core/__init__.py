@@ -1,15 +1,21 @@
 # The paper's primary contribution: a Stream-class analytical DSE engine
 # extended with transformer layer types (matmul-on-features, transpose,
 # softmax) and layer-fused scheduling, plus the shape-driven schedule
-# selector reused by the TPU runtime.
-from repro.core import analytical, codesign
+# selector reused by the TPU runtime.  The Step-5 executor is split into
+# costmodel (per-node latency/energy), interconnect (link/NoC layer) and
+# engine (event-driven multi-core executor); scheduler.evaluate is the
+# stable facade over the three.
+from repro.core import analytical, codesign, costmodel, engine, interconnect
 from repro.core.accelerator import (Accelerator, Core, MemoryLevel,
                                     SIMDUnit, gap8, multi_core_array,
                                     pe_array_64x64, tpu_v5e_like)
 from repro.core.allocation import GAResult, heads_schedule, optimize_allocation
+from repro.core.costmodel import AnalyticalCostModel, CostModel
 from repro.core.dependencies import ALL, Requirement, required_inputs
 from repro.core.fusion import (best_schedule, explore, fuse_all, fuse_pv,
-                               fuse_q_qkt, lbl, select_schedule)
+                               fuse_q_qkt, lbl, multi_head_candidates,
+                               select_schedule)
+from repro.core.interconnect import Interconnect, LinkTimeline, Transfer
 from repro.core.nodes import ComputationNode, split_layer, split_workload
 from repro.core.scheduler import (IllegalSchedule, Result, Schedule, Stage,
                                   evaluate, layer_by_layer)
@@ -20,13 +26,15 @@ from repro.core.workload import (INPUT, WEIGHT, Elementwise, Layer,
                                  parallel_heads)
 
 __all__ = [
-    "analytical", "codesign",
+    "analytical", "codesign", "costmodel", "engine", "interconnect",
     "Accelerator", "Core", "MemoryLevel", "SIMDUnit",
     "gap8", "multi_core_array", "pe_array_64x64", "tpu_v5e_like",
     "GAResult", "heads_schedule", "optimize_allocation",
+    "AnalyticalCostModel", "CostModel",
     "ALL", "Requirement", "required_inputs",
     "best_schedule", "explore", "fuse_all", "fuse_pv", "fuse_q_qkt",
-    "lbl", "select_schedule",
+    "lbl", "multi_head_candidates", "select_schedule",
+    "Interconnect", "LinkTimeline", "Transfer",
     "ComputationNode", "split_layer", "split_workload",
     "IllegalSchedule", "Result", "Schedule", "Stage", "evaluate",
     "layer_by_layer",

@@ -22,6 +22,8 @@ import dataclasses
 import math
 from typing import Optional
 
+from repro.core.interconnect import Interconnect
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryLevel:
@@ -99,6 +101,9 @@ class Accelerator:
     interconnect_bandwidth: float = 64.0
     offchip_bandwidth: float = 8.0
     frequency_hz: float = 100e6
+    # explicit link/NoC model; None -> a default point-to-point fabric
+    # derived from ``interconnect_bandwidth`` (see ``fabric()``)
+    interconnect: Optional[Interconnect] = None
 
     def core(self, idx: int) -> Core:
         return self.cores[idx]
@@ -106,6 +111,12 @@ class Accelerator:
     @property
     def n_cores(self) -> int:
         return len(self.cores)
+
+    def fabric(self) -> Interconnect:
+        """The core-to-core interconnect the executor books transfers on."""
+        if self.interconnect is not None:
+            return self.interconnect
+        return Interconnect(bandwidth=self.interconnect_bandwidth)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +165,9 @@ def gap8(utilization: float = 0.444) -> Accelerator:
         interconnect_bandwidth=51.0 / 8.0,
         offchip_bandwidth=1.0,
         frequency_hz=100e6,
+        # the cluster shares one L2 TCDM bus; transfers serialise on it
+        interconnect=Interconnect(bandwidth=51.0 / 8.0, energy_per_word=6.0,
+                                  latency=16.0, topology="bus"),
     )
 
 
@@ -205,6 +219,10 @@ def multi_core_array(n_cores: int, l1_io_words: int = 1 << 22) -> Accelerator:
         name=f"PE64x64x{n_cores}", cores=cores,
         interconnect_bandwidth=64.0, offchip_bandwidth=64.0,
         frequency_hz=1e9,
+        # dedicated 64-word links per ordered core pair; moving a word
+        # core-to-core costs about an L2 access
+        interconnect=Interconnect(bandwidth=64.0, energy_per_word=2.0,
+                                  latency=0.0, topology="ptp"),
     )
 
 
@@ -237,4 +255,9 @@ def tpu_v5e_like() -> Accelerator:
         interconnect_bandwidth=50e9 / word / freq,
         offchip_bandwidth=819e9 / word / freq,
         frequency_hz=freq,
+        # ICI: ~50 GB/s/link point-to-point; DMA setup dominates small
+        # transfers, energy per word far above on-chip SRAM
+        interconnect=Interconnect(bandwidth=50e9 / word / freq,
+                                  energy_per_word=40.0, latency=1e3,
+                                  topology="ptp"),
     )

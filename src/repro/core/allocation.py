@@ -7,8 +7,13 @@ head — heads share no weights and, per Sec. IV.C.3, parallelise across
 cores with unchanged per-core memory gain.
 
 The GA genome maps head -> core; fitness is the Step-5 scheduler's
-latency (optionally blended with the max per-core feature-memory peak).
-Deterministic for a given seed.
+latency (optionally blended with the max per-core feature-memory peak
+and the schedule's communication cycles).  The event-driven engine
+books every cross-core tensor movement — input broadcast included — on
+the platform interconnect, so latency is already communication-aware;
+``comm_weight`` adds *explicit* pressure against link-heavy allocations
+on top (useful when links are shared with other tenants or when energy
+matters more than the critical path).  Deterministic for a given seed.
 """
 
 from __future__ import annotations
@@ -67,6 +72,7 @@ def optimize_allocation(
     generations: int = 20,
     mutation_rate: Optional[float] = None,
     memory_weight: float = 0.0,
+    comm_weight: float = 0.0,
     seed: int = 0,
     fitness_fn: Optional[Callable[[sch.Result], float]] = None,
 ) -> GAResult:
@@ -92,7 +98,8 @@ def optimize_allocation(
             f = fitness_fn(res)
         else:
             mem = max(res.per_core_peak.values(), default=0)
-            f = res.latency_cycles + memory_weight * mem
+            f = res.latency_cycles + memory_weight * mem \
+                + comm_weight * res.comm_cycles
         cache[genome] = (f, res)
         evals += 1
         return f, res

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core import costmodel
+
 MXU = 128                      # systolic tile edge; block dims align to it
 DEFAULT_VMEM_BUDGET_BYTES = 96 * 1024 * 1024  # leave headroom out of ~128MB
 
@@ -76,18 +78,14 @@ def recommend_attention_tiling(
 
 def hbm_traffic_unfused(M: int, N: int, dtype_bytes: int = 2) -> int:
     """Bytes through HBM for the layer-by-layer score path: write+read of
-    the M x M score matrix dominates (the paper's stored intermediate)."""
-    scores = 2 * M * M * dtype_bytes           # write then read
-    qkv = 3 * M * N * dtype_bytes
-    out = M * N * dtype_bytes
-    return scores + qkv + out
+    the M x M score matrix dominates (the paper's stored intermediate).
+    Closed form lives in ``core/costmodel.py`` next to the node model."""
+    return costmodel.attention_hbm_traffic(M, N, dtype_bytes, fused=False)
 
 
 def hbm_traffic_fused(M: int, N: int, dtype_bytes: int = 2) -> int:
     """Fused (Fig. 5c analogue): score matrix never leaves VMEM."""
-    qkv = 3 * M * N * dtype_bytes
-    out = M * N * dtype_bytes
-    return qkv + out
+    return costmodel.attention_hbm_traffic(M, N, dtype_bytes, fused=True)
 
 
 def fused_traffic_gain(M: int, N: int) -> float:

@@ -110,6 +110,61 @@ def candidates(prefix: str = "", core: int = 0) -> list[sch.Schedule]:
     return out
 
 
+def split_head_pipeline(prefix: str = "", proj_core: int = 0,
+                        attn_core: int = 1) -> sch.Schedule:
+    """Pipeline one head across two cores: the projections run on
+    ``proj_core`` while the fused score pipeline runs on ``attn_core``
+    with Q *streamed over the interconnect* (a cross-core streamed edge
+    — rows of Q are forwarded through the link as they are produced and
+    never occupy the projection core's L1)."""
+    p = prefix
+    return sch.Schedule(
+        name=f"split[{proj_core}->{attn_core}]",
+        stages=(
+            sch.Stage(layers=(f"{p}K",), core=proj_core),
+            sch.Stage(layers=(f"{p}V",), core=proj_core),
+            sch.Stage(layers=(f"{p}Q",), core=proj_core),
+            sch.Stage(
+                layers=(f"{p}QKT", f"{p}SM", f"{p}AV"),
+                streamed=frozenset({(f"{p}Q", f"{p}QKT"),
+                                    (f"{p}QKT", f"{p}SM"),
+                                    (f"{p}SM", f"{p}AV")}),
+                core=attn_core,
+            ),
+        ),
+    )
+
+
+def multi_head_candidates(n_heads: int, n_cores: int) -> list[sch.Schedule]:
+    """Schedule space for ``n_heads`` parallel heads on ``n_cores`` cores:
+    every fusion policy crossed with head->core placements (all heads on
+    core 0, round-robin data parallelism over heads) plus the cross-core
+    split-head pipeline when at least two cores exist."""
+    builders = (("lbl", lbl), ("fuse_q_qkt", fuse_q_qkt),
+                ("fuse_pv", fuse_pv), ("fuse_all", fuse_all))
+    allocs = {"c0": tuple(0 for _ in range(n_heads))}
+    if n_cores > 1:
+        allocs["rr"] = tuple(h % n_cores for h in range(n_heads))
+    out: list[sch.Schedule] = []
+    for pname, builder in builders:
+        for aname, alloc in allocs.items():
+            stages: list[sch.Stage] = []
+            for h, c in enumerate(alloc):
+                stages.extend(builder(f"h{h}.", c).stages)
+            out.append(sch.Schedule(
+                name=f"heads{n_heads}[{pname}]@{aname}",
+                stages=tuple(stages)))
+    if n_cores > 1:
+        stages = []
+        for h in range(n_heads):
+            stages.extend(split_head_pipeline(
+                f"h{h}.", proj_core=h % n_cores,
+                attn_core=(h + 1) % n_cores).stages)
+        out.append(sch.Schedule(
+            name=f"heads{n_heads}[split]@pipe", stages=tuple(stages)))
+    return out
+
+
 @dataclasses.dataclass
 class ExplorationResult:
     schedule: sch.Schedule
@@ -118,22 +173,35 @@ class ExplorationResult:
 
 def explore(M: int, N: int, accel: Optional[Accelerator] = None,
             row_block: Optional[int] = None,
-            latency_tolerance: float = 1.02) -> list[ExplorationResult]:
+            latency_tolerance: float = 1.02,
+            n_heads: int = 1) -> list[ExplorationResult]:
     """Evaluate every candidate schedule for an M x N attention head and
     return them sorted by (peak active memory, latency).
 
     ``latency_tolerance``: the paper searches for fused schedules at the
     *same optimal latency* as LBL; candidates slower than
     tolerance x best-latency are dropped.
+
+    ``n_heads > 1`` widens the search to multi-head multi-core
+    schedules over ``accel``'s cores (``parallel_heads`` workload,
+    ``multi_head_candidates`` space): head-parallel placements compete
+    with single-core and cross-core split pipelines, with communication
+    booked on the interconnect — so a multi-core candidate only wins
+    when its transfer cost is actually paid for.
     """
     accel = accel or pe_array_64x64()
     if row_block is None:
         row_block = max(1, M // 256)  # keep node counts bounded for sweeps
-    head = wl.attention_head(M, N)
+    if n_heads == 1:
+        workload = wl.attention_head(M, N)
+        cands = candidates()
+    else:
+        workload = wl.parallel_heads(M, N, n_heads)
+        cands = multi_head_candidates(n_heads, accel.n_cores)
     evals: list[ExplorationResult] = []
-    for cand in candidates():
+    for cand in cands:
         try:
-            res = sch.evaluate(head, accel, cand, row_block=row_block)
+            res = sch.evaluate(workload, accel, cand, row_block=row_block)
         except sch.IllegalSchedule:
             continue
         evals.append(ExplorationResult(cand, res))

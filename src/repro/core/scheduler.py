@@ -7,13 +7,24 @@ more layers *row-interleaved*; edges listed in ``streamed`` are
 layer-fused: the producer's rows are forwarded through register files
 ('connections between these register files ... make it possible to
 consume outputs of a given attention head layer immediately as input of
-a next layer', Sec. IV.B.1) and never occupy L1 feature memory.
+a next layer', Sec. IV.B.1) and never occupy L1 feature memory.  A
+streamed edge may also *cross* stages when producer and consumer run on
+different cores: the rows are then forwarded over the platform's
+interconnect instead of a register file (declared on the consumer
+stage; see ``core/engine.py``).
 
-Inside a stage the executor performs greedy earliest-start scheduling
-over the core's two resources (PE array + SIMD unit), with a bounded
-skew (double-buffering) constraint on streamed edges — this reproduces
-the software pipelining that lets fused schedules match layer-by-layer
-latency (the paper's central iso-latency claim).
+This module is the stable facade over three composable pieces:
+
+* ``core/costmodel.py`` — per-node latency/energy (``CostModel``
+  protocol; the analytical model is the default implementation);
+* ``core/interconnect.py`` — the link/NoC model cross-core transfers
+  are booked on;
+* ``core/engine.py``     — the event-driven executor that schedules all
+  stages' nodes against global time with per-(core, resource) ready
+  queues.
+
+``evaluate`` keeps its seed signature and, for single-core schedules,
+its bit-exact seed results (pinned by tests/test_core_engine.py).
 
 Memory accounting (the paper's 'total active features memory'):
 
@@ -22,7 +33,11 @@ Memory accounting (the paper's 'total active features memory'):
 * a tensor row is freed when the last consumer node needing it completes
   (row-range liveness from dependencies.consumer_row_counts);
 * network outputs stay active (the dot at the end of Fig. 5's plots);
-* weights are not feature data and are not tracked.
+* weights are not feature data and are not tracked;
+* a tensor consumed on a different core than it was produced on is
+  double-buffered: the replica occupies the consumer's L1 from its
+  arrival over the link until the last consumer node on that core
+  completes, while the home copy follows row liveness as before.
 
 Accounting granularity (matches the paper's Fig. 5 bookkeeping exactly):
 row-range frees (substitutions — 'one row of the left input matrix can
@@ -38,14 +53,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core import dependencies as deps
 from repro.core import nodes as cn
 from repro.core import workload as wl
-from repro.core.accelerator import Accelerator, Core
+from repro.core.accelerator import Accelerator
+from repro.core.costmodel import CostModel, IllegalSchedule  # noqa: F401
 
-
-class IllegalSchedule(Exception):
-    """Raised when a schedule violates the dependency rules of Step 2."""
+__all__ = [
+    "IllegalSchedule", "Stage", "Schedule", "Result", "layer_by_layer",
+    "evaluate",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,18 +69,24 @@ class Stage:
     """Row-interleaved execution of ``layers`` on core ``core``.
 
     ``streamed`` holds (producer, consumer) layer-name pairs fused through
-    register files.  Both ends must be in this stage, producer first.
+    register files.  The consumer must be in this stage; the producer is
+    either also in this stage (classic intra-stage fusion, producer
+    first) or scheduled by another stage on a *different* core — a
+    cross-core streamed edge forwarded over the interconnect.
     """
 
     layers: tuple[str, ...]
-    streamed: frozenset = frozenset()
+    streamed: frozenset[tuple[str, str]] = frozenset()
     core: int = 0
 
     def __post_init__(self):
         for a, b in self.streamed:
-            if a not in self.layers or b not in self.layers:
+            if b not in self.layers:
                 raise IllegalSchedule(
-                    f"streamed edge ({a},{b}) not inside stage {self.layers}")
+                    f"streamed edge ({a},{b}): consumer not inside stage "
+                    f"{self.layers}")
+            if a not in self.layers:
+                continue    # cross-stage edge: engine validates the rest
             if self.layers.index(a) >= self.layers.index(b):
                 raise IllegalSchedule(
                     f"streamed edge ({a},{b}) must go forward in the stage")
@@ -75,8 +97,8 @@ class Schedule:
     name: str
     stages: tuple[Stage, ...]
 
-    def streamed_pairs(self) -> frozenset:
-        out = set()
+    def streamed_pairs(self) -> frozenset[tuple[str, str]]:
+        out: set[tuple[str, str]] = set()
         for st in self.stages:
             out |= set(st.streamed)
         return frozenset(out)
@@ -107,6 +129,10 @@ class Result:
     trace: list                  # [(cycle, total_active_words)]
     macs: int
     vector_ops: int
+    # communication accounting (zero for single-core schedules)
+    comm_cycles: float = 0.0     # total link busy cycles
+    comm_energy_pj: float = 0.0  # included in energy_pj as well
+    link_utilization: dict = dataclasses.field(default_factory=dict)
 
     @property
     def latency_mcycles(self) -> float:
@@ -137,243 +163,14 @@ def _streamed_tensors(workload: wl.Workload,
     return out
 
 
-def _node_latency(node: cn.ComputationNode, layer: wl.Layer, core: Core,
-                  streamed_in: bool, streamed_out: bool) -> float:
-    """max(compute, memory) cycles for one node (Sec. II.B step 3)."""
-    if node.simd:
-        if core.simd is None:
-            raise IllegalSchedule(f"{node} needs a SIMD unit")
-        return max(node.vector_ops / core.simd.width, 1.0)
-    compute = node.macs / core.effective_macs_per_cycle
-    # memory movement (skip streamed operands: register-file forwarding)
-    io_words = 0
-    if isinstance(layer, wl.MatMul):
-        if not streamed_in and layer.i1 != wl.WEIGHT:
-            io_words += node.n_rows * layer.s
-        if not streamed_out:
-            io_words += node.n_rows * layer.cols
-        rhs_words = layer.s * layer.cols  # right operand, multi-banked level
-    else:
-        io_words = 0 if streamed_in else node.n_rows * layer.cols
-        rhs_words = 0
-    io_bw = core.levels[0].bandwidth
-    rhs_idx = getattr(core, "rhs_level_index", 0)
-    rhs_bw = core.levels[min(rhs_idx, len(core.levels) - 1)].bandwidth
-    mem = max(io_words / io_bw, rhs_words / rhs_bw if rhs_words else 0.0)
-    return max(compute, mem, 1.0)
-
-
-def _node_energy(node: cn.ComputationNode, layer: wl.Layer, core: Core,
-                 streamed_in: bool, streamed_out: bool) -> tuple[float, int]:
-    """(energy_pj, feature_l1_words_touched) for one node."""
-    l1 = core.levels[0]
-    upper = core.levels[1] if len(core.levels) > 1 else core.levels[0]
-    e = node.macs * core.mac_energy
-    if core.simd is not None:
-        e += node.vector_ops * core.simd.op_energy
-    feat_words = 0
-    if isinstance(layer, wl.MatMul):
-        if layer.i1 != wl.WEIGHT and not streamed_in:
-            feat_words += node.n_rows * layer.s
-        if layer.i2 == wl.WEIGHT:
-            # weights fetched once per layer from the upper level, amortised
-            e += (layer.s * layer.cols / max(layer.rows, 1)) \
-                * node.n_rows * upper.read_energy
-        else:
-            feat_words += layer.s * layer.cols  # feature rhs re-read per block
-    elif not streamed_in:
-        feat_words += node.n_rows * layer.cols
-    if not streamed_out:
-        feat_words += node.n_rows * layer.cols
-    e += feat_words * l1.read_energy
-    return e, feat_words
-
-
 def evaluate(workload: wl.Workload, accel: Accelerator, schedule: Schedule,
-             row_block: int = 1) -> Result:
-    """Execute ``schedule`` on the analytical machine model."""
-    split = cn.split_workload(workload, row_block)
-    counts = deps.consumer_row_counts(workload, row_block)
-    streamed_tensors = _streamed_tensors(workload, schedule)
-    streamed_pairs = schedule.streamed_pairs()
-    streamed_producers = {a for a, _ in streamed_pairs}
+             row_block: int = 1,
+             cost_model: Optional[CostModel] = None) -> Result:
+    """Execute ``schedule`` on the analytical machine model.
 
-    # completion time per (layer, node-index); row prefix completion
-    comp: dict[str, list] = {name: [] for name in split}
-    # which cores replicate the network input
-    input_cores = set()
-    for st in schedule.stages:
-        for lname in st.layers:
-            for req_rows in [deps.required_inputs(workload, lname, 0,
-                                                  min(row_block,
-                                                      workload.layers[lname].rows))]:
-                if any(r.producer == wl.INPUT for r in req_rows):
-                    input_cores.add(st.core)
-    tensor_core: dict[str, int] = {}
-
-    # (time, rank, core, delta_words); rank 0 = allocations + atomic
-    # row-substitution frees, rank 1 = deferred end-of-tensor frees —
-    # peaks are recorded between rank 0 and rank 1 of the same instant.
-    events: list = []
-    for c in (input_cores or {0}):
-        events.append((0.0, 0, c, workload.input_words))
-
-    res_free: dict = {}
-    rows_left = {t: list(cnt) for t, cnt in counts.items()}
-    cols_of = {wl.INPUT: workload.input_cols}
-    for l in workload.layers.values():
-        cols_of[l.name] = l.cols
-
-    def dep_ready_time(lname: str, a: int, b: int) -> Optional[float]:
-        """Completion time after which rows [a,b) of every required input
-        exist; None if the schedule has not produced them yet."""
-        t = 0.0
-        for req in deps.required_inputs(workload, lname, a, b):
-            if req.producer == wl.INPUT:
-                continue
-            pnodes = split[req.producer]
-            if not pnodes:   # view with no nodes: resolved already
-                continue
-            need_row = (pnodes[-1].row_end if req.region == deps.ALL
-                        else req.region[1])
-            done = comp[req.producer]
-            # nodes complete in row order; find first node covering need_row-1
-            k = 0
-            covered = 0
-            for k, nd in enumerate(pnodes):
-                if nd.row_end >= need_row:
-                    covered = k + 1
-                    break
-            if len(done) < covered:
-                return None
-            t = max(t, done[covered - 1])
-        return t
-
-    def apply_completion(node: cn.ComputationNode, core: int, t: float):
-        layer = workload.layers[node.layer]
-        if node.layer not in streamed_tensors:
-            tensor_core.setdefault(node.layer, core)
-            events.append((t, 0, core, node.n_rows * layer.cols))
-        # release rows of inputs
-        for req in deps.required_inputs(workload, node.layer,
-                                        node.row_start, node.row_end):
-            if req.producer in streamed_tensors:
-                continue
-            rank = 1 if req.region == deps.ALL else 0
-            rl = rows_left[req.producer]
-            rng = range(len(rl)) if req.region == deps.ALL else \
-                range(req.region[0], min(req.region[1], len(rl)))
-            freed = 0
-            for i in rng:
-                rl[i] -= 1
-                if rl[i] == 0:
-                    freed += 1
-            if freed:
-                cols = cols_of[req.producer]
-                if req.producer == wl.INPUT:
-                    for c in (input_cores or {0}):
-                        events.append((t, rank, c, -freed * cols))
-                else:
-                    events.append((t, rank,
-                                   tensor_core.get(req.producer, core),
-                                   -freed * cols))
-
-    total_energy = 0.0
-    total_feat_words = 0
-    total_macs = 0
-    total_vops = 0
-    makespan = 0.0
-
-    for st in schedule.stages:
-        core = accel.core(st.core)
-        idx = {l: 0 for l in st.layers}
-        nstages = {l: split[l] for l in st.layers}
-        # drop view layers (no nodes)
-        active_layers = [l for l in st.layers if nstages[l]]
-        remaining = sum(len(nstages[l]) for l in active_layers)
-        while remaining:
-            best = None
-            for lname in active_layers:
-                i = idx[lname]
-                nds = nstages[lname]
-                if i >= len(nds):
-                    continue
-                node = nds[i]
-                # bounded skew on streamed edges (double buffering)
-                blocked = False
-                for a, b in st.streamed:
-                    if lname == a and nstages.get(b) and \
-                            idx[a] > idx[b] + 1:
-                        blocked = True
-                        break
-                if blocked:
-                    continue
-                dep_t = dep_ready_time(lname, node.row_start, node.row_end)
-                if dep_t is None:
-                    continue
-                rkey = (st.core, "simd" if node.simd else "array")
-                start = max(res_free.get(rkey, 0.0), dep_t)
-                key = (start, st.layers.index(lname), i)
-                if best is None or key < best[0]:
-                    best = (key, lname, node, rkey, start)
-            if best is None:
-                raise IllegalSchedule(
-                    f"deadlock in stage {st.layers} of {schedule.name}: "
-                    "dependencies cannot be satisfied (check Step-2 rules)")
-            _, lname, node, rkey, start = best
-            layer = workload.layers[lname]
-            s_in = any((p, lname) in streamed_pairs
-                       for p in (layer.feature_inputs() or ()))
-            s_out = lname in streamed_producers
-            lat = _node_latency(node, layer, core, s_in, s_out)
-            end = start + lat
-            res_free[rkey] = end
-            makespan = max(makespan, end)
-            comp[lname].append(end)
-            e, fw = _node_energy(node, layer, core, s_in, s_out)
-            total_energy += e
-            total_feat_words += fw
-            total_macs += node.macs
-            total_vops += node.vector_ops
-            apply_completion(node, st.core, end)
-            idx[lname] += 1
-            remaining -= 1
-
-    # fold events into a trace + peaks (atomic per (time, rank, core))
-    events.sort(key=lambda e: (e[0], e[1]))
-    per_core = {}
-    per_core_peak = {}
-    trace = []
-    total = 0
-    i = 0
-    while i < len(events):
-        t, rank = events[i][0], events[i][1]
-        j = i
-        while j < len(events) and events[j][0] == t and events[j][1] == rank:
-            _, _, c, d = events[j]
-            per_core[c] = per_core.get(c, 0) + d
-            total += d
-            j += 1
-        for c in per_core:
-            per_core_peak[c] = max(per_core_peak.get(c, 0), per_core[c])
-        trace.append((t, total))
-        i = j
-    peak = max((w for _, w in trace), default=0)
-
-    # optional size-scaled SRAM energy: a memory sized for THIS schedule's
-    # peak is cheaper per access (paper Sec. IV.C.3)
-    l1 = accel.core(0).levels[0]
-    scale = l1.scaled_access_energy(peak) / l1.read_energy
-    energy_scaled = total_energy + total_feat_words * l1.read_energy * (scale - 1.0)
-
-    return Result(
-        schedule=schedule.name,
-        latency_cycles=makespan,
-        energy_pj=total_energy,
-        energy_scaled_pj=energy_scaled,
-        peak_active_words=peak,
-        per_core_peak=per_core_peak,
-        trace=trace,
-        macs=total_macs,
-        vector_ops=total_vops,
-    )
+    Thin facade over the event-driven executor in ``core/engine.py``;
+    ``cost_model`` defaults to the analytical ``costmodel.DEFAULT``.
+    """
+    from repro.core import engine
+    return engine.execute(workload, accel, schedule, row_block=row_block,
+                          cost_model=cost_model)

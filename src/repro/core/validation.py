@@ -40,6 +40,10 @@ class ValidationPoint:
     deviation_vs_paper_model: float   # |model - stream| / stream
     macs: int
     macs_per_cycle: float
+    # GAP8 is modelled as one cluster-core, so this stays 0 until the
+    # multi-cluster (GAP9-style) description lands; reported so the
+    # validation row keeps comm visible once it does.
+    comm_cycles: float = 0.0
 
 
 def validate(seq_len: int, row_block: int = 1) -> ValidationPoint:
@@ -77,6 +81,7 @@ def validate(seq_len: int, row_block: int = 1) -> ValidationPoint:
         / STREAM_ESTIMATE[seq_len],
         macs=macs,
         macs_per_cycle=macs / res.latency_cycles,
+        comm_cycles=res.comm_cycles,
     )
 
 

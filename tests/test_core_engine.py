@@ -1,0 +1,233 @@
+"""Event-driven engine tests: seed-exact single-core regression, explicit
+cross-core communication (transfers, occupancy, link utilization),
+cross-core streamed edges, stage-order independence, and the
+communication-aware GA / multi-core explorer."""
+
+import dataclasses
+import hashlib
+import math
+
+import pytest
+
+from repro.core import analytical as an
+from repro.core import costmodel
+from repro.core import fusion
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+from repro.core.accelerator import multi_core_array, pe_array_64x64
+from repro.core.allocation import optimize_allocation
+from repro.core.interconnect import Interconnect, LinkTimeline
+
+
+# ------------------------------------------------------- seed regression
+# Golden values captured from the SEED monolithic scheduler (pre-refactor
+# commit 5d954ef) for every fusion.candidates() schedule on a 256x256
+# head, row_block=4: (latency_cycles, energy_pj, energy_scaled_pj,
+# peak_active_words, len(trace), sha256(repr(trace))[:16]).  The
+# event-driven engine must reproduce them bit-exactly.
+SEED_GOLD_256 = (
+    [(20480.0, 93297049.60000038, 86108464.03018497, 196608, 387,
+      "b9a3ec415c25078e")] * 6          # lbl, all 6 QKV orderings
+    + [(20480.0, 93165977.60000038, 86080086.10975377, 196608, 323,
+        "fe0e1af6b6bb12cd")]            # fuse[Q->QKT]
+    + [(20480.0, 93034905.6000002, 86051708.18932238, 196608, 323,
+        "944bbe78293eff60")] * 6        # fuse[QKT->SM->AV], 6 orderings
+    + [(20480.0, 92903833.60000011, 86023330.26889108, 196608, 259,
+        "2e262ce193a29ae7")]            # fuse[Q->QKT->SM->AV]
+)
+
+
+def test_single_core_results_match_seed_model():
+    """The refactor contract: single-core evaluate() is bit-identical to
+    the seed's stage-by-stage executor for the whole candidate space."""
+    accel = pe_array_64x64()
+    head = wl.attention_head(256, 256)
+    cands = fusion.candidates()
+    assert len(cands) == len(SEED_GOLD_256)
+    for cand, gold in zip(cands, SEED_GOLD_256):
+        res = sch.evaluate(head, accel, cand, row_block=4)
+        trace_sha = hashlib.sha256(repr(res.trace).encode()) \
+            .hexdigest()[:16]
+        assert (res.latency_cycles, res.energy_pj, res.energy_scaled_pj,
+                res.peak_active_words, len(res.trace), trace_sha) \
+            == tuple(gold), cand.name
+        # single-core schedules move nothing across the fabric
+        assert res.comm_cycles == 0.0
+        assert res.comm_energy_pj == 0.0
+        assert res.link_utilization == {}
+
+
+def test_cost_model_protocol_and_injection():
+    """evaluate() routes per-node costs through the CostModel protocol."""
+    assert isinstance(costmodel.AnalyticalCostModel(), costmodel.CostModel)
+
+    class DoubleLatency(costmodel.AnalyticalCostModel):
+        def node_latency(self, *a, **kw):
+            return 2.0 * super().node_latency(*a, **kw)
+
+    accel = pe_array_64x64()
+    head = wl.attention_head(128, 128)
+    base = sch.evaluate(head, accel, fusion.lbl(), row_block=8)
+    slow = sch.evaluate(head, accel, fusion.lbl(), row_block=8,
+                        cost_model=DoubleLatency())
+    assert slow.latency_cycles == 2.0 * base.latency_cycles
+    assert slow.peak_active_words == base.peak_active_words
+
+
+# ------------------------------------------------- cross-core transfers
+def _split_schedule(prefix: str = "") -> sch.Schedule:
+    """QKV projections on core 0, score pipeline on core 1 — Q, K and V
+    all cross the link."""
+    p = prefix
+    return sch.Schedule(name="split", stages=(
+        sch.Stage(layers=(f"{p}Q",), core=0),
+        sch.Stage(layers=(f"{p}K",), core=0),
+        sch.Stage(layers=(f"{p}V",), core=0),
+        sch.Stage(layers=(f"{p}QKT",), core=1),
+        sch.Stage(layers=(f"{p}SM",), core=1),
+        sch.Stage(layers=(f"{p}AV",), core=1),
+    ))
+
+
+def test_cross_core_tensor_books_communication():
+    """A tensor consumed on a different core than it was produced on
+    must cost link cycles/energy and delay the consumer relative to the
+    seed's free-communication machine model."""
+    mc2 = multi_core_array(2)
+    head = wl.attention_head(256, 256)
+    res = sch.evaluate(head, mc2, _split_schedule(), row_block=4)
+    assert res.comm_cycles > 0
+    assert res.comm_energy_pj > 0
+    assert (0, 1) in res.link_utilization
+    assert 0.0 < res.link_utilization[(0, 1)] <= 1.0
+
+    # free-communication baseline: infinite-bandwidth fabric
+    free = dataclasses.replace(
+        mc2, interconnect=Interconnect(bandwidth=math.inf))
+    base = sch.evaluate(head, free, _split_schedule(), row_block=4)
+    assert base.comm_cycles == 0.0
+    assert res.latency_cycles > base.latency_cycles
+
+
+def test_remote_replica_double_buffered_occupancy():
+    """The consumer core's L1 must hold a replica of the transferred
+    tensor (double-buffered: home copy + replica both accounted)."""
+    mc2 = multi_core_array(2)
+    head = wl.attention_head(256, 256)
+    res = sch.evaluate(head, mc2, _split_schedule(), row_block=4)
+    # core 1 holds replicas of Q (while scoring) on top of its own
+    # QKT/SM outputs; with free cross-core movement and no replica
+    # accounting the seed model would report a strictly smaller core-1
+    # peak (it kept Q/K/V billed to core 0 only).
+    assert res.per_core_peak[1] > an.a_lbl(256, 256) - 3 * 256 * 256 // 2
+    total_alloc = sum(res.per_core_peak.values())
+    assert total_alloc >= res.peak_active_words
+
+
+def test_cross_core_streamed_edge():
+    """Q produced on core 0 may stream straight into QK^T on core 1:
+    comm is booked, but Q never occupies L1 (only a double-buffered
+    row-block on each side), so the peak drops vs the stored split."""
+    mc2 = multi_core_array(2)
+    head = wl.attention_head(256, 256)
+    stored = sch.evaluate(head, mc2, _split_schedule(), row_block=4)
+    streamed = sch.evaluate(head, mc2, fusion.split_head_pipeline(),
+                            row_block=4)
+    assert streamed.comm_cycles > 0
+    assert streamed.peak_active_words < stored.peak_active_words
+
+
+def test_stage_list_order_is_irrelevant_across_cores():
+    """The event-driven engine schedules against global time: a stage
+    may consume tensors produced by a stage appearing LATER in the
+    schedule list on another core (the seed deadlocked on this).  Only
+    the per-core relative order of stages carries meaning."""
+    mc2 = multi_core_array(2)
+    head = wl.attention_head(256, 256)
+    fwd = sch.evaluate(head, mc2, _split_schedule(), row_block=4)
+    stages = _split_schedule().stages
+    # consumer core's stages first, producer core's last
+    swapped = tuple(st for st in stages if st.core == 1) \
+        + tuple(st for st in stages if st.core == 0)
+    rev = sch.evaluate(head, mc2,
+                       sch.Schedule(name="rev", stages=swapped),
+                       row_block=4)
+    assert rev.latency_cycles == fwd.latency_cycles
+    assert rev.comm_cycles == fwd.comm_cycles
+
+
+def test_same_core_cross_stage_stream_rejected():
+    """Cross-stage streamed edges model interconnect forwarding; on one
+    core the paper's register-file fusion requires a single stage."""
+    head = wl.attention_head(64, 64)
+    bad = sch.Schedule(name="bad", stages=(
+        sch.Stage(layers=("K",), core=0),
+        sch.Stage(layers=("V",), core=0),
+        sch.Stage(layers=("Q",), core=0),
+        sch.Stage(layers=("QKT", "SM", "AV"),
+                  streamed=frozenset({("Q", "QKT"), ("QKT", "SM"),
+                                      ("SM", "AV")}), core=0),
+    ))
+    with pytest.raises(sch.IllegalSchedule):
+        sch.evaluate(head, multi_core_array(2), bad, row_block=8)
+
+
+def test_bus_topology_serialises_transfers():
+    """On a shared bus all transfers contend for one timeline; dedicated
+    point-to-point links let the input broadcast run in parallel."""
+    n = 4
+    ptp = multi_core_array(n)
+    bus = dataclasses.replace(
+        ptp, interconnect=Interconnect(bandwidth=64.0, topology="bus"))
+    w = wl.parallel_heads(256, 128, n)
+    from repro.core.allocation import heads_schedule
+    sched = heads_schedule(256, 128, tuple(range(n)), "auto")
+    r_ptp = sch.evaluate(w, ptp, sched, row_block=8)
+    r_bus = sch.evaluate(w, bus, sched, row_block=8)
+    assert r_bus.latency_cycles > r_ptp.latency_cycles
+    assert r_bus.comm_cycles == r_ptp.comm_cycles  # same words moved
+    assert set(r_bus.link_utilization) == {"bus"}
+
+
+def test_link_timeline_fifo_accounting():
+    ic = Interconnect(bandwidth=8.0, energy_per_word=3.0, latency=2.0)
+    tl = LinkTimeline(ic)
+    a = tl.book(0, 1, "t0", 16, 0.0)
+    assert (a.start, a.end) == (0.0, 4.0)          # 2 + 16/8
+    b = tl.book(0, 1, "t1", 8, 1.0)                # queued behind a
+    assert (b.start, b.end) == (4.0, 7.0)
+    c = tl.book(1, 0, "t2", 8, 0.0)                # opposite direction
+    assert (c.start, c.end) == (0.0, 3.0)
+    assert tl.comm_energy_pj == (16 + 8 + 8) * 3.0
+    util = tl.utilization(10.0)
+    assert util[(0, 1)] == pytest.approx(0.7)
+    assert util[(1, 0)] == pytest.approx(0.3)
+
+
+# ------------------------------------- comm-aware allocation + explorer
+def test_ga_allocation_reports_nonzero_communication():
+    """Acceptance: a 4-core GA allocation must account the input
+    broadcast as real communication cycles and energy."""
+    res = optimize_allocation(256, 128, n_heads=8,
+                              accel=multi_core_array(4),
+                              generations=4, population=8, row_block=16)
+    assert res.result.comm_cycles > 0
+    assert res.result.comm_energy_pj > 0
+
+
+def test_explore_returns_multicore_candidate_as_optimal():
+    """Acceptance: with parallel heads on a multi-core platform the
+    explorer's optimum is a genuinely multi-core schedule."""
+    evals = fusion.explore(256, 128, accel=multi_core_array(4),
+                           n_heads=4, row_block=8)
+    best = evals[0]
+    assert len({st.core for st in best.schedule.stages}) > 1
+    assert best.result.comm_cycles > 0
+    # ...and it actually beats running everything on core 0
+    solo = [e for e in fusion.explore(256, 128,
+                                      accel=multi_core_array(4),
+                                      n_heads=4, row_block=8,
+                                      latency_tolerance=1e9)
+            if e.schedule.name.endswith("@c0")]
+    assert best.result.latency_cycles \
+        < min(e.result.latency_cycles for e in solo)

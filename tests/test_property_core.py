@@ -1,7 +1,9 @@
 """Hypothesis property tests on the DSE engine's invariants."""
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import analytical as an
 from repro.core import fusion
