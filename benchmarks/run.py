@@ -1,27 +1,53 @@
 """Benchmark harness: one module per paper table/figure + the roofline
-table.  Prints ``name,us_per_call,derived`` CSV lines per the repo
-contract plus a readable report.
+table + the engine/block-exploration benches.  Prints
+``name,us_per_call,derived`` CSV lines per the repo contract plus a
+readable report.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run                 # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig6_alpha
+    PYTHONPATH=src python -m benchmarks.run --only blocks_bench --only roofline
+
+``--only`` takes a module name (repeatable) and skips importing the
+unselected modules, so e.g. the pure-DSE figures run without JAX.
 """
 
+import argparse
+import importlib
 import json
 import time
 
+# module name -> import path, in report order
+MODULES = {
+    "fig4_validation": "benchmarks.fig4_validation",
+    "fig5_memory_traces": "benchmarks.fig5_memory_traces",
+    "fig6_alpha": "benchmarks.fig6_alpha",
+    "tableI_features": "benchmarks.tableI_features",
+    "engine_bench": "benchmarks.engine_bench",
+    "blocks_bench": "benchmarks.blocks_bench",
+    "kernel_bench": "benchmarks.kernel_bench",
+    "roofline": "benchmarks.roofline",
+}
 
-def main() -> None:
-    from benchmarks import (engine_bench, fig4_validation,
-                            fig5_memory_traces, fig6_alpha, kernel_bench,
-                            roofline, tableI_features)
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--only", action="append", choices=sorted(MODULES),
+                        metavar="FIGURE",
+                        help="run only this module (repeatable); "
+                             f"one of: {', '.join(MODULES)}")
+    args = parser.parse_args(argv)
+    selected = args.only or list(MODULES)
     print("name,us_per_call,derived")
-    for mod in (fig4_validation, fig5_memory_traces, fig6_alpha,
-                tableI_features, engine_bench, kernel_bench, roofline):
+    for name in MODULES:
+        if name not in selected:
+            continue
+        mod = importlib.import_module(MODULES[name])
         t0 = time.perf_counter()
         rows = mod.run()
         us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
         for r in rows:
-            name = r.pop("name")
-            print(f"{name},{us:.0f},\"{json.dumps(r)}\"")
+            rname = r.pop("name")
+            print(f"{rname},{us:.0f},\"{json.dumps(r)}\"")
 
 
 if __name__ == "__main__":

@@ -2,13 +2,16 @@
 
 sweep M/N, explore the schedule space per shape, print the alpha curve
 (Fig. 6), run the GA core-allocation for a multi-head block on a
-4-core platform, and show the co-design bridge picking TPU kernel
-tilings from the same principle.
+4-core platform, explore a *full transformer block* of a model-zoo
+config through the generic schedule-space generator, and show the
+co-design bridge picking TPU kernel tilings from the same principle.
 
     PYTHONPATH=src python examples/schedule_explorer.py
 """
 
-from repro.core import analytical, codesign, fusion
+from repro.core import analytical, codesign, fusion, spacegen
+from repro.core import scheduler as sch
+from repro.core import workload as wl
 from repro.core.accelerator import multi_core_array
 from repro.core.allocation import optimize_allocation
 
@@ -51,6 +54,31 @@ def multicore_explore():
               f"comm={e.result.comm_cycles:5.0f}")
 
 
+def block_explore():
+    print("\nBlock-level exploration — qwen3-8b (smoke shape) through the\n"
+          "generic generator (spacegen): GQA attention + GLU FFN + norms\n"
+          "+ residuals, ModelConfig -> Workload bridge:")
+    from repro import configs
+    cfg = configs.get_config("qwen3-8b", smoke=True)
+    blk = wl.from_model_config(cfg, 128)
+    accel = multi_core_array(4)
+    base = sch.evaluate(blk, accel, sch.layer_by_layer(blk), row_block=2)
+    opts = spacegen.SpaceOptions(max_orderings=3, max_cuts=12,
+                                 max_candidates=32)
+    evals = fusion.explore(blk, accel=accel, space=opts,
+                           latency_tolerance=1e9)
+    print(f"  workload: {blk.name} ({len(blk.layers)} layers), "
+          f"{len(evals)} candidates")
+    print(f"  layer-by-layer: peak={base.peak_active_words} "
+          f"latency={base.latency_cycles:.0f}")
+    for e in evals[:3]:
+        r = e.result
+        print(f"  {e.schedule.name:18s} peak={r.peak_active_words:7d} "
+              f"({r.peak_active_words / base.peak_active_words:.2%} of "
+              f"LBL)  latency={r.latency_cycles:7.0f} "
+              f"comm={r.comm_cycles:5.0f}")
+
+
 def tpu_codesign():
     print("\nCo-design bridge — DSE picks the TPU kernel tiling:")
     for (sq, skv, d) in [(4096, 4096, 128), (32768, 32768, 128),
@@ -67,4 +95,5 @@ if __name__ == "__main__":
     alpha_curve()
     ga_allocation()
     multicore_explore()
+    block_explore()
     tpu_codesign()

@@ -4,8 +4,14 @@
 # selector reused by the TPU runtime.  The Step-5 executor is split into
 # costmodel (per-node latency/energy), interconnect (link/NoC layer) and
 # engine (event-driven multi-core executor); scheduler.evaluate is the
-# stable facade over the three.
-from repro.core import analytical, codesign, costmodel, engine, interconnect
+# stable facade over the three.  spacegen generates the legal
+# (topological ordering x fusion cut x core placement) schedule space
+# for ANY workload DAG — the named Fig. 5 presets in fusion are thin
+# wrappers over its assembly helper — and workload's builders cover
+# full transformer blocks (GQA attention, GLU/dense FFN, norms,
+# residuals) bridged from the model zoo via from_model_config.
+from repro.core import (analytical, codesign, costmodel, engine,
+                        interconnect, spacegen)
 from repro.core.accelerator import (Accelerator, Core, MemoryLevel,
                                     SIMDUnit, gap8, multi_core_array,
                                     pe_array_64x64, tpu_v5e_like)
@@ -19,14 +25,17 @@ from repro.core.interconnect import Interconnect, LinkTimeline, Transfer
 from repro.core.nodes import ComputationNode, split_layer, split_workload
 from repro.core.scheduler import (IllegalSchedule, Result, Schedule, Stage,
                                   evaluate, layer_by_layer)
-from repro.core.validation import validate, validate_all
+from repro.core.spacegen import SpaceOptions, chain_schedule, generate
+from repro.core.validation import validate, validate_all, validate_schedule
 from repro.core.workload import (INPUT, WEIGHT, Elementwise, Layer,
                                  LayerNorm, MatMul, Softmax, Transpose,
-                                 Workload, attention_head, cct_mhsa, mhsa,
-                                 parallel_heads)
+                                 Workload, attention_head, cct_mhsa, ffn,
+                                 from_model_config, gqa_attention, mhsa,
+                                 parallel_heads, transformer_block)
 
 __all__ = [
     "analytical", "codesign", "costmodel", "engine", "interconnect",
+    "spacegen",
     "Accelerator", "Core", "MemoryLevel", "SIMDUnit",
     "gap8", "multi_core_array", "pe_array_64x64", "tpu_v5e_like",
     "GAResult", "heads_schedule", "optimize_allocation",
@@ -38,8 +47,10 @@ __all__ = [
     "ComputationNode", "split_layer", "split_workload",
     "IllegalSchedule", "Result", "Schedule", "Stage", "evaluate",
     "layer_by_layer",
-    "validate", "validate_all",
+    "SpaceOptions", "chain_schedule", "generate",
+    "validate", "validate_all", "validate_schedule",
     "INPUT", "WEIGHT", "Elementwise", "Layer", "LayerNorm", "MatMul",
     "Softmax", "Transpose", "Workload", "attention_head", "cct_mhsa",
-    "mhsa", "parallel_heads",
+    "ffn", "from_model_config", "gqa_attention", "mhsa",
+    "parallel_heads", "transformer_block",
 ]

@@ -38,6 +38,36 @@ ALL = "ALL"
 Region = Union[str, tuple[int, int]]   # ALL or (row_start, row_end)
 
 
+def is_view(layer: wl.Layer) -> bool:
+    """Non-materialised transposes are zero-copy views: no computation
+    nodes, resolved through :func:`_resolve_view`."""
+    return isinstance(layer, wl.Transpose) and not layer.materialize
+
+
+def real_producers(workload: wl.Workload, name: str) -> list[str]:
+    """Feature producers of ``name`` with views resolved to their
+    sources; INPUT excluded, duplicates merged, order preserved."""
+    out: list[str] = []
+    for dep in workload.layers[name].feature_inputs():
+        while dep != wl.INPUT and is_view(workload.layers[dep]):
+            dep = workload.layers[dep].src
+        if dep != wl.INPUT and dep not in out:
+            out.append(dep)
+    return out
+
+
+def real_consumers(workload: wl.Workload, name: str) -> list[str]:
+    """Consumer layer names of ``name`` with views expanded to *their*
+    consumers (K -> K^T view -> QK^T), order preserved."""
+    out: list[str] = []
+    for c in workload.consumers(name):
+        if is_view(c):
+            out.extend(x.name for x in workload.consumers(c.name))
+        else:
+            out.append(c.name)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class Requirement:
     """Consumer needs ``region`` of ``producer``'s output (or the network

@@ -10,10 +10,15 @@ Three named schedules (Fig. 5):
                    Fig. 5c): the M x M score matrix is never stored; the
                    softmax runs on the SIMD core inside the pipeline.
 
-``explore`` enumerates the legal (ordering x fusion-group) space and
-evaluates each candidate with the Step-5 scheduler — the engine
-*rediscovers* the paper's optima rather than hard-coding them (tests
-assert the discovered peak equals analytical.a_lf / a_lbl).
+``explore`` evaluates a schedule space with the Step-5 scheduler — the
+engine *rediscovers* the paper's optima rather than hard-coding them
+(tests assert the discovered peak equals analytical.a_lf / a_lbl).
+Given an (M, N) pair it searches the named attention-head presets;
+given any ``Workload`` (FFN, GQA attention, a full transformer block
+from ``workload.from_model_config``) the space comes from the generic
+generator in ``core/spacegen.py``.  The presets themselves are thin
+wrappers over ``spacegen.chain_schedule``, so hand-written and
+generated schedules share one assembly path.
 
 ``select_schedule`` is the shape-driven decision rule the paper
 concludes with, reused by the runtime (models/attention.py) to pick the
@@ -24,10 +29,11 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional
+from typing import Optional, Union
 
 from repro.core import analytical
 from repro.core import scheduler as sch
+from repro.core import spacegen
 from repro.core import workload as wl
 from repro.core.accelerator import Accelerator, pe_array_64x64
 
@@ -38,27 +44,18 @@ def lbl(prefix: str = "", core: int = 0,
     QK^T may be swapped without changing latency or peak memory."""
     p = prefix
     names = [f"{p}{n}" for n in qkv_order] + [f"{p}QKT", f"{p}SM", f"{p}AV"]
-    return sch.Schedule(
-        name=f"lbl[{''.join(qkv_order)}]",
-        stages=tuple(sch.Stage(layers=(n,), core=core) for n in names),
-    )
+    return spacegen.chain_schedule(f"lbl[{''.join(qkv_order)}]", names,
+                                   core=core)
 
 
 def fuse_q_qkt(prefix: str = "", core: int = 0) -> sch.Schedule:
     """Fig. 5b (optimal for M < N): K first, then Q fused into QK^T
     (Q streamed), then V, softmax, AV."""
     p = prefix
-    return sch.Schedule(
-        name="fuse[Q->QKT]",
-        stages=(
-            sch.Stage(layers=(f"{p}K",), core=core),
-            sch.Stage(layers=(f"{p}Q", f"{p}QKT"),
-                      streamed=frozenset({(f"{p}Q", f"{p}QKT")}), core=core),
-            sch.Stage(layers=(f"{p}V",), core=core),
-            sch.Stage(layers=(f"{p}SM",), core=core),
-            sch.Stage(layers=(f"{p}AV",), core=core),
-        ),
-    )
+    return spacegen.chain_schedule(
+        "fuse[Q->QKT]",
+        [f"{p}K", f"{p}Q", f"{p}QKT", f"{p}V", f"{p}SM", f"{p}AV"],
+        fused={(f"{p}Q", f"{p}QKT")}, core=core)
 
 
 def fuse_pv(prefix: str = "", core: int = 0,
@@ -67,39 +64,30 @@ def fuse_pv(prefix: str = "", core: int = 0,
     QK^T -> softmax -> .V fused (score rows streamed through the SIMD
     core, one Q row substituted by one output row)."""
     p = prefix
-    pre = tuple(sch.Stage(layers=(f"{p}{n}",), core=core)
-                for n in kvq_order)
-    fused = sch.Stage(
-        layers=(f"{p}QKT", f"{p}SM", f"{p}AV"),
-        streamed=frozenset({(f"{p}QKT", f"{p}SM"), (f"{p}SM", f"{p}AV")}),
-        core=core,
-    )
-    return sch.Schedule(name="fuse[QKT->SM->AV]", stages=pre + (fused,))
+    order = [f"{p}{n}" for n in kvq_order] \
+        + [f"{p}QKT", f"{p}SM", f"{p}AV"]
+    return spacegen.chain_schedule(
+        "fuse[QKT->SM->AV]", order,
+        fused={(f"{p}QKT", f"{p}SM"), (f"{p}SM", f"{p}AV")}, core=core)
 
 
 def fuse_all(prefix: str = "", core: int = 0) -> sch.Schedule:
     """The Fig. 5c-caption alternative: fuse Q, QK^T (and onwards) instead
     of computing Q completely first."""
     p = prefix
-    return sch.Schedule(
-        name="fuse[Q->QKT->SM->AV]",
-        stages=(
-            sch.Stage(layers=(f"{p}K",), core=core),
-            sch.Stage(layers=(f"{p}V",), core=core),
-            sch.Stage(
-                layers=(f"{p}Q", f"{p}QKT", f"{p}SM", f"{p}AV"),
-                streamed=frozenset({(f"{p}Q", f"{p}QKT"),
-                                    (f"{p}QKT", f"{p}SM"),
-                                    (f"{p}SM", f"{p}AV")}),
-                core=core,
-            ),
-        ),
-    )
+    return spacegen.chain_schedule(
+        "fuse[Q->QKT->SM->AV]",
+        [f"{p}K", f"{p}V", f"{p}Q", f"{p}QKT", f"{p}SM", f"{p}AV"],
+        fused={(f"{p}Q", f"{p}QKT"), (f"{p}QKT", f"{p}SM"),
+               (f"{p}SM", f"{p}AV")}, core=core)
 
 
 def candidates(prefix: str = "", core: int = 0) -> list[sch.Schedule]:
-    """The legal schedule space the explorer searches: QKV orderings for
-    LBL plus every fusion pattern."""
+    """The named preset space for one attention head: QKV orderings for
+    LBL plus every fusion pattern.  Each entry is a point of the
+    generic ``spacegen.generate`` space (pinned by
+    tests/test_spacegen.py); the presets exist so the paper's Fig. 5
+    schedules keep their names and enumeration order."""
     out: list[sch.Schedule] = []
     for perm in itertools.permutations(("Q", "K", "V")):
         out.append(lbl(prefix, core, qkv_order=perm))
@@ -171,37 +159,64 @@ class ExplorationResult:
     result: sch.Result
 
 
-def explore(M: int, N: int, accel: Optional[Accelerator] = None,
+def explore(workload: Union[int, wl.Workload], N: Optional[int] = None,
+            accel: Optional[Accelerator] = None,
             row_block: Optional[int] = None,
             latency_tolerance: float = 1.02,
-            n_heads: int = 1) -> list[ExplorationResult]:
-    """Evaluate every candidate schedule for an M x N attention head and
-    return them sorted by (peak active memory, latency).
+            n_heads: int = 1,
+            space: Optional[spacegen.SpaceOptions] = None,
+            ) -> list[ExplorationResult]:
+    """Evaluate a candidate schedule space and return the survivors
+    sorted by (peak active memory, latency).
+
+    Two entry points share this engine:
+
+    * ``explore(M, N, ...)`` — the paper's M x N attention head over
+      the named preset space (``candidates``; with ``n_heads > 1`` the
+      multi-head multi-core space of ``multi_head_candidates`` over
+      a ``parallel_heads`` workload, communication booked on the
+      interconnect so a multi-core candidate only wins when its
+      transfer cost is actually paid for).
+    * ``explore(some_workload, ...)`` — *any* ``Workload`` DAG (FFN,
+      GQA attention, a full transformer block built by
+      ``workload.from_model_config``); the space comes from the
+      generic generator ``spacegen.generate`` over ``accel``'s cores,
+      bounded by ``space`` (a ``spacegen.SpaceOptions``).
 
     ``latency_tolerance``: the paper searches for fused schedules at the
     *same optimal latency* as LBL; candidates slower than
     tolerance x best-latency are dropped.
-
-    ``n_heads > 1`` widens the search to multi-head multi-core
-    schedules over ``accel``'s cores (``parallel_heads`` workload,
-    ``multi_head_candidates`` space): head-parallel placements compete
-    with single-core and cross-core split pipelines, with communication
-    booked on the interconnect — so a multi-core candidate only wins
-    when its transfer cost is actually paid for.
     """
     accel = accel or pe_array_64x64()
-    if row_block is None:
-        row_block = max(1, M // 256)  # keep node counts bounded for sweeps
-    if n_heads == 1:
-        workload = wl.attention_head(M, N)
-        cands = candidates()
+    if isinstance(workload, wl.Workload):
+        if N is not None or n_heads != 1:
+            raise TypeError(
+                "N/n_heads apply only to the explore(M, N) entry "
+                "point; with a Workload first argument, build the "
+                "heads into the workload itself")
+        net = workload
+        cands = spacegen.generate(net, n_cores=accel.n_cores,
+                                  options=space)
+        if row_block is None:
+            rows = max(l.rows for l in net.layers.values())
+            row_block = max(1, rows // 64)
     else:
-        workload = wl.parallel_heads(M, N, n_heads)
-        cands = multi_head_candidates(n_heads, accel.n_cores)
+        M = workload
+        if N is None:
+            raise TypeError("explore(M, N): N is required when the "
+                            "first argument is a dimension")
+        if row_block is None:
+            row_block = max(1, M // 256)  # keep node counts bounded
+        if n_heads == 1:
+            net = wl.attention_head(M, N)
+            cands = candidates()
+        else:
+            net = wl.parallel_heads(M, N, n_heads)
+            cands = multi_head_candidates(n_heads, accel.n_cores)
     evals: list[ExplorationResult] = []
     for cand in cands:
         try:
-            res = sch.evaluate(workload, accel, cand, row_block=row_block)
+            res = sch.evaluate(net, accel, cand, row_block=row_block)
         except sch.IllegalSchedule:
             continue
         evals.append(ExplorationResult(cand, res))
@@ -215,8 +230,11 @@ def explore(M: int, N: int, accel: Optional[Accelerator] = None,
     return evals
 
 
-def best_schedule(M: int, N: int, **kw) -> ExplorationResult:
-    return explore(M, N, **kw)[0]
+def best_schedule(workload: Union[int, wl.Workload],
+                  N: Optional[int] = None, **kw) -> ExplorationResult:
+    """The (peak, latency)-optimal schedule; accepts the same
+    (M, N) / Workload entry points as ``explore``."""
+    return explore(workload, N, **kw)[0]
 
 
 # ---------------------------------------------------------------------------

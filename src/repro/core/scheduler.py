@@ -143,22 +143,17 @@ def _streamed_tensors(workload: wl.Workload,
                       schedule: Schedule) -> set[str]:
     """Tensors that never hit L1: every consumer reads them through a
     streamed edge, and they are not workload outputs."""
+    from repro.core import dependencies as deps
     pairs = schedule.streamed_pairs()
     out = set()
     for layer in workload.layers.values():
-        consumers = workload.consumers(layer.name)
-        # follow view consumers (K -> KT view -> QKT)
-        real_consumers = []
-        for c in consumers:
-            if isinstance(c, wl.Transpose) and not c.materialize:
-                real_consumers.extend(workload.consumers(c.name))
-            else:
-                real_consumers.append(c)
-        if not real_consumers:
+        # view consumers followed to their consumers (K -> KT -> QKT)
+        consumers = deps.real_consumers(workload, layer.name)
+        if not consumers:
             continue
         if layer.name in workload.outputs:
             continue
-        if all((layer.name, c.name) in pairs for c in real_consumers):
+        if all((layer.name, c) in pairs for c in consumers):
             out.add(layer.name)
     return out
 

@@ -1,4 +1,7 @@
-"""Section III validation: the CCT-like MHSA on GAP8.
+"""Section III validation: the CCT-like MHSA on GAP8, plus the static
+schedule validator ``validate_schedule`` used to check any
+(workload, schedule) pair — including every schedule emitted by the
+generic generator in ``core/spacegen.py`` — without running the engine.
 
 Published numbers (paper, Sec. III):
 
@@ -87,3 +90,122 @@ def validate(seq_len: int, row_block: int = 1) -> ValidationPoint:
 
 def validate_all() -> list[ValidationPoint]:
     return [validate(81), validate(128)]
+
+
+# ---------------------------------------------------------------------------
+# Static schedule validation (no engine run)
+# ---------------------------------------------------------------------------
+
+def validate_schedule(workload: wl.Workload,
+                      schedule: sch.Schedule) -> list[str]:
+    """Check a schedule against the Step-2 legality rules without
+    executing it.  Returns a list of problem descriptions — empty means
+    the schedule is structurally legal.
+
+    Checks: every node-producing layer scheduled exactly once and
+    nothing unknown; streamed edges name real row-aligned dependencies
+    with the consumer inside the stage (cross-stage only across cores);
+    per-core stage order respects intra-core dependencies (a core
+    executes its stages strictly in order); and the cross-core stage
+    graph — dependency edges plus per-core program order — is acyclic
+    (deadlock-free).
+
+    This is Step-2 legality only: platform-dependent failures — e.g. a
+    SIMD node placed on a core whose description has no SIMD unit —
+    are the cost model's domain and still surface as IllegalSchedule
+    from ``scheduler.evaluate``.
+    """
+    problems: list[str] = []
+    from repro.core import dependencies as deps
+    _is_view = deps.is_view
+
+    def real_producers(name: str) -> list[str]:
+        return [r.producer
+                for r in deps.required_inputs(workload, name, 0, 1)
+                if r.producer != wl.INPUT]
+
+    expected = {l.name for l in workload.layers.values()
+                if not _is_view(l)}
+    scheduled: dict[str, int] = {}
+    for si, st in enumerate(schedule.stages):
+        for lname in st.layers:
+            if lname not in workload.layers:
+                problems.append(f"stage {si}: unknown layer {lname!r}")
+                continue
+            if lname in scheduled:
+                problems.append(f"layer {lname!r} scheduled twice "
+                                f"(stages {scheduled[lname]} and {si})")
+            scheduled[lname] = si
+    missing = expected - set(scheduled)
+    if missing:
+        problems.append(f"layers never scheduled: {sorted(missing)}")
+    if problems:
+        return problems
+
+    stage_core = {si: st.core for si, st in enumerate(schedule.stages)}
+
+    # streamed-edge legality
+    for si, st in enumerate(schedule.stages):
+        for a, b in st.streamed:
+            if b not in st.layers:
+                problems.append(f"streamed edge ({a},{b}): consumer "
+                                f"outside stage {si}")
+                continue
+            if a not in workload.layers:
+                problems.append(f"streamed edge ({a},{b}): unknown "
+                                "producer")
+                continue
+            reqs = {r.producer: r.region
+                    for r in deps.required_inputs(workload, b, 0, 1)}
+            if a not in reqs:
+                problems.append(f"streamed edge ({a},{b}): {b!r} does "
+                                f"not consume {a!r}")
+            elif reqs[a] == deps.ALL:
+                problems.append(f"streamed edge ({a},{b}): {b!r} reads "
+                                f"{a!r} whole-tensor, not row-aligned")
+            if a not in st.layers and a in scheduled \
+                    and stage_core[scheduled[a]] == st.core:
+                problems.append(f"streamed edge ({a},{b}) crosses "
+                                f"stages on core {st.core}")
+
+    # per-core program order must respect dependencies
+    for name, si in scheduled.items():
+        for p in real_producers(name):
+            pi = scheduled.get(p)
+            if pi is None:
+                continue
+            if stage_core[pi] == stage_core[si] and pi > si:
+                problems.append(
+                    f"core {stage_core[si]}: {name!r} (stage {si}) "
+                    f"needs {p!r} scheduled later (stage {pi})")
+
+    # cross-core stage graph (deps + per-core order) must be acyclic
+    succ: dict[int, set] = {si: set() for si in stage_core}
+    per_core: dict[int, list] = {}
+    for si in sorted(stage_core):
+        per_core.setdefault(stage_core[si], []).append(si)
+    for stages in per_core.values():
+        for a, b in zip(stages, stages[1:]):
+            succ[a].add(b)
+    for name, si in scheduled.items():
+        for p in real_producers(name):
+            pi = scheduled.get(p)
+            if pi is not None and pi != si:
+                succ[pi].add(si)
+    indeg = {si: 0 for si in succ}
+    for si, outs in succ.items():
+        for o in outs:
+            indeg[o] += 1
+    queue = [si for si, d in indeg.items() if d == 0]
+    seen = 0
+    while queue:
+        cur = queue.pop()
+        seen += 1
+        for o in succ[cur]:
+            indeg[o] -= 1
+            if indeg[o] == 0:
+                queue.append(o)
+    if seen != len(succ):
+        problems.append("cross-core dependency cycle between stages "
+                        "(deadlock)")
+    return problems

@@ -9,6 +9,14 @@ Matmul dimension convention follows the paper (Sec. II.A):
     I1 (R x S)  @  I2 (S x T)  ->  O (R x T)
 so for Q/K/V:  R=M, S=T=N;  for QK^T: R=T=M, S=N;  for (QK^T)V:
 R=S=M, T=N.
+
+Beyond the paper's single head, builders cover full transformer-block
+workloads: ``ffn`` (dense and GLU variants), ``gqa_attention``
+(grouped-query attention — query heads share K/V tensors per KV group),
+``transformer_block`` (pre/post-norm with residual adds) and
+``from_model_config`` which bridges any ``models.common.ModelConfig``
+(the architectures registered in ``repro.configs.ARCHS``) into a DSE
+workload of one block at a given sequence length.
 """
 
 from __future__ import annotations
@@ -152,6 +160,20 @@ class Workload:
     # layers whose outputs must stay live at the end (feed the next block;
     # the 'dot at the end' of the paper's Fig. 5 plots).
     outputs: tuple[str, ...] = ()
+    # consumer adjacency, maintained by add(): producer name (or INPUT)
+    # -> consumer layer names in insertion order.  Precomputed so the
+    # scheduling loops' consumers() lookups are O(degree), not O(L).
+    _consumer_names: dict[str, list[str]] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self):
+        self._consumer_names.clear()
+        for layer in self.layers.values():
+            self._index_consumers(layer)
+
+    def _index_consumers(self, layer: Layer) -> None:
+        for dep in layer.feature_inputs():
+            self._consumer_names.setdefault(dep, []).append(layer.name)
 
     def add(self, layer: Layer) -> Layer:
         if layer.name in self.layers:
@@ -160,27 +182,38 @@ class Workload:
             if dep not in (INPUT,) and dep not in self.layers:
                 raise ValueError(f"{layer.name!r} depends on unknown {dep!r}")
         self.layers[layer.name] = layer
+        self._index_consumers(layer)
         return layer
 
     def topo_order(self) -> list[Layer]:
+        """Dependency-first (post-)order over insertion order, iterative so
+        block stacks hundreds of layers deep stay clear of the Python
+        recursion limit."""
         order: list[Layer] = []
         done: set[str] = set()
-
-        def visit(name: str) -> None:
-            if name in done or name == INPUT:
-                return
-            layer = self.layers[name]
-            for dep in layer.feature_inputs():
-                visit(dep)
-            done.add(name)
-            order.append(layer)
-
-        for name in self.layers:
-            visit(name)
+        for root in self.layers:
+            if root in done:
+                continue
+            stack = [(root, iter(self.layers[root].feature_inputs()))]
+            while stack:
+                name, it = stack[-1]
+                pushed = False
+                for dep in it:
+                    if dep == INPUT or dep in done:
+                        continue
+                    stack.append(
+                        (dep, iter(self.layers[dep].feature_inputs())))
+                    pushed = True
+                    break
+                if not pushed:
+                    stack.pop()
+                    if name not in done:
+                        done.add(name)
+                        order.append(self.layers[name])
         return order
 
     def consumers(self, name: str) -> list[Layer]:
-        return [l for l in self.layers.values() if name in l.feature_inputs()]
+        return [self.layers[c] for c in self._consumer_names.get(name, ())]
 
     def total_macs(self) -> int:
         return sum(l.macs() for l in self.layers.values())
@@ -287,6 +320,193 @@ def parallel_heads(M: int, N: int, n_heads: int) -> Workload:
                      i2=f"{p}V"))
         outs.append(f"{p}AV")
     w.outputs = tuple(outs)
+    return w
+
+
+def _add_gqa_attention(w: Workload, M: int, src: str, d_model: int,
+                       n_heads: int, n_kv_heads: int, d_head: int,
+                       prefix: str = "",
+                       output_projection: bool = True) -> str:
+    """Grouped-query attention reading features from ``src``: every query
+    head projects its own Q; K/V (and the K^T view) are shared per KV
+    group, so consecutive ``n_heads // n_kv_heads`` heads consume the
+    same K^T / V feature tensors.  Returns the output layer name."""
+    if n_heads % n_kv_heads:
+        raise ValueError(f"n_heads={n_heads} not divisible by "
+                         f"n_kv_heads={n_kv_heads}")
+    p = prefix
+    group = n_heads // n_kv_heads
+    for g in range(n_kv_heads):
+        w.add(MatMul(f"{p}kv{g}.K", rows=M, cols=d_head, s=d_model,
+                     i1=src, i2=WEIGHT))
+        w.add(Transpose(f"{p}kv{g}.KT", rows=d_head, cols=M,
+                        src=f"{p}kv{g}.K"))
+        w.add(MatMul(f"{p}kv{g}.V", rows=M, cols=d_head, s=d_model,
+                     i1=src, i2=WEIGHT))
+    head_outs = []
+    for h in range(n_heads):
+        g = h // group
+        w.add(MatMul(f"{p}h{h}.Q", rows=M, cols=d_head, s=d_model,
+                     i1=src, i2=WEIGHT))
+        w.add(MatMul(f"{p}h{h}.QKT", rows=M, cols=M, s=d_head,
+                     i1=f"{p}h{h}.Q", i2=f"{p}kv{g}.KT"))
+        w.add(Softmax(f"{p}h{h}.SM", rows=M, cols=M, src=f"{p}h{h}.QKT"))
+        w.add(MatMul(f"{p}h{h}.AV", rows=M, cols=d_head,
+                     s=M, i1=f"{p}h{h}.SM", i2=f"{p}kv{g}.V"))
+        head_outs.append(f"{p}h{h}.AV")
+    if not output_projection:
+        return head_outs[-1]
+    # concat-of-heads projection modelled as per-head partial projections
+    # accumulated elementwise (same convention as mhsa()).
+    prev = None
+    for h, ho in enumerate(head_outs):
+        name = f"{p}proj{h}"
+        w.add(MatMul(name, rows=M, cols=d_model, s=d_head,
+                     i1=ho, i2=WEIGHT))
+        if prev is None:
+            prev = name
+        else:
+            w.add(Elementwise(f"{p}acc{h}", rows=M, cols=d_model,
+                              src=prev, src2=name))
+            prev = f"{p}acc{h}"
+    return prev
+
+
+def _add_ffn(w: Workload, M: int, src: str, d_model: int, d_ff: int,
+             kind: str = "silu_glu", prefix: str = "") -> str:
+    """Feed-forward network reading features from ``src``.
+
+    ``silu_glu``: gate/up projections, SiLU on the gate, elementwise
+    product, down projection (the GLU family used by qwen3 / deepseek /
+    starcoder2's variants).  ``gelu``: classic dense up -> GELU -> down.
+    Returns the output layer name.
+    """
+    p = prefix
+    if kind == "silu_glu":
+        w.add(MatMul(f"{p}gate", rows=M, cols=d_ff, s=d_model,
+                     i1=src, i2=WEIGHT))
+        w.add(MatMul(f"{p}up", rows=M, cols=d_ff, s=d_model,
+                     i1=src, i2=WEIGHT))
+        w.add(Elementwise(f"{p}act", rows=M, cols=d_ff, src=f"{p}gate"))
+        w.add(Elementwise(f"{p}mul", rows=M, cols=d_ff, src=f"{p}act",
+                          src2=f"{p}up"))
+        hidden = f"{p}mul"
+    elif kind == "gelu":
+        w.add(MatMul(f"{p}up", rows=M, cols=d_ff, s=d_model,
+                     i1=src, i2=WEIGHT))
+        w.add(Elementwise(f"{p}act", rows=M, cols=d_ff, src=f"{p}up"))
+        hidden = f"{p}act"
+    else:
+        raise ValueError(f"unknown ffn kind {kind!r}")
+    w.add(MatMul(f"{p}down", rows=M, cols=d_model, s=d_ff,
+                 i1=hidden, i2=WEIGHT))
+    return f"{p}down"
+
+
+def ffn(M: int, d_model: int, d_ff: int, *, kind: str = "silu_glu",
+        prefix: str = "") -> Workload:
+    """Standalone FFN workload: (M x d_model) features through a dense
+    (``gelu``) or GLU (``silu_glu``) feed-forward of hidden width d_ff."""
+    w = Workload(name=f"{prefix}ffn_{kind}_M{M}_D{d_model}_F{d_ff}",
+                 input_rows=M, input_cols=d_model)
+    out = _add_ffn(w, M, INPUT, d_model, d_ff, kind, prefix)
+    w.outputs = (out,)
+    return w
+
+
+def gqa_attention(M: int, d_model: int, n_heads: int, *,
+                  n_kv_heads: int = 0, d_head: int = 0,
+                  prefix: str = "") -> Workload:
+    """Standalone grouped-query attention workload (n_kv_heads=0 or
+    == n_heads degenerates to classic MHSA)."""
+    n_kv_heads = n_kv_heads or n_heads
+    d_head = d_head or d_model // n_heads
+    w = Workload(
+        name=f"{prefix}gqa_M{M}_D{d_model}_H{n_heads}kv{n_kv_heads}",
+        input_rows=M, input_cols=d_model)
+    out = _add_gqa_attention(w, M, INPUT, d_model, n_heads, n_kv_heads,
+                             d_head, prefix)
+    w.outputs = (out,)
+    return w
+
+
+def transformer_block(M: int, d_model: int, n_heads: int, d_ff: int, *,
+                      n_kv_heads: int = 0, d_head: int = 0,
+                      mlp: str = "silu_glu", norm: str = "pre",
+                      prefix: str = "") -> Workload:
+    """One full transformer block: norm + GQA attention + residual add +
+    norm + FFN + residual add.
+
+    ``norm="pre"`` (qwen3/starcoder2/...): x + Attn(LN(x)), then
+    y + FFN(LN(y)); the block output is the second residual sum.
+    ``norm="post"``: LN(x + Attn(x)), LN(y + FFN(y)) (original
+    encoder convention, e.g. hubert's transformer trunk).
+    """
+    n_kv_heads = n_kv_heads or n_heads
+    d_head = d_head or d_model // n_heads
+    p = prefix
+    w = Workload(
+        name=f"{p}block_M{M}_D{d_model}_H{n_heads}kv{n_kv_heads}_F{d_ff}",
+        input_rows=M, input_cols=d_model)
+    if norm == "pre":
+        w.add(LayerNorm(f"{p}ln1", rows=M, cols=d_model, src=INPUT))
+        attn = _add_gqa_attention(w, M, f"{p}ln1", d_model, n_heads,
+                                  n_kv_heads, d_head, p)
+        w.add(Elementwise(f"{p}res1", rows=M, cols=d_model,
+                          src=attn, src2=INPUT))
+        w.add(LayerNorm(f"{p}ln2", rows=M, cols=d_model, src=f"{p}res1"))
+        out = _add_ffn(w, M, f"{p}ln2", d_model, d_ff, mlp, p)
+        w.add(Elementwise(f"{p}res2", rows=M, cols=d_model,
+                          src=out, src2=f"{p}res1"))
+        w.outputs = (f"{p}res2",)
+    elif norm == "post":
+        attn = _add_gqa_attention(w, M, INPUT, d_model, n_heads,
+                                  n_kv_heads, d_head, p)
+        w.add(Elementwise(f"{p}res1", rows=M, cols=d_model,
+                          src=attn, src2=INPUT))
+        w.add(LayerNorm(f"{p}ln1", rows=M, cols=d_model, src=f"{p}res1"))
+        out = _add_ffn(w, M, f"{p}ln1", d_model, d_ff, mlp, p)
+        w.add(Elementwise(f"{p}res2", rows=M, cols=d_model,
+                          src=out, src2=f"{p}ln1"))
+        w.add(LayerNorm(f"{p}ln2", rows=M, cols=d_model, src=f"{p}res2"))
+        w.outputs = (f"{p}ln2",)
+    else:
+        raise ValueError(f"unknown norm placement {norm!r}")
+    return w
+
+
+def from_model_config(cfg, seq_len: int, *, layer_index: int = 0,
+                      norm: str = "pre") -> Workload:
+    """Bridge a ``models.common.ModelConfig`` (anything in
+    ``repro.configs.ARCHS``) to a one-block DSE workload at ``seq_len``.
+
+    Duck-typed on the config's dims (d_model / n_heads / kv_heads /
+    head_dim / d_ff / mlp) so the core stays importable without JAX.
+    MoE layers are modelled as the dense-equivalent routed compute
+    (top_k * d_expert hidden width — the per-token FLOPs actually
+    executed).  Attention flavours beyond GQA/MHA (MLA, SSM/mamba
+    blocks) are not expressible yet and raise ``ValueError``.
+    """
+    kind = cfg.block_kind(layer_index) if hasattr(cfg, "block_kind") \
+        else "attn"
+    if kind != "attn":
+        raise ValueError(
+            f"{cfg.name}: layer {layer_index} is a {kind!r} block; only "
+            "attention blocks are expressible as DSE workloads")
+    attention = getattr(cfg, "attention", "gqa")
+    if attention not in ("gqa",):
+        raise ValueError(
+            f"{cfg.name}: attention flavour {attention!r} is not "
+            "expressible yet (GQA/MHA only)")
+    d_ff = cfg.d_ff
+    if hasattr(cfg, "ffn_kind") and cfg.ffn_kind(layer_index) == "moe":
+        d_ff = (getattr(cfg, "d_expert", 0) or cfg.d_ff) \
+            * max(getattr(cfg, "top_k", 1), 1)
+    w = transformer_block(
+        seq_len, cfg.d_model, cfg.n_heads, d_ff,
+        n_kv_heads=cfg.kv_heads, d_head=cfg.head_dim,
+        mlp=getattr(cfg, "mlp", "silu_glu"), norm=norm)
+    w.name = f"{cfg.name}_L{layer_index}_M{seq_len}"
     return w
 
 

@@ -10,6 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 from repro import configs
 from repro.models import forward, init_params_and_axes
 from repro.serve.engine import decode_step, init_decode_state, prefill

@@ -9,6 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticTokenDataset, make_batch_iterator
 from repro.runtime import StepTimer, run_with_restarts

@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 SCRIPT_DECODE = r"""
 import jax, jax.numpy as jnp
 from repro.sharding import set_rules_for_mesh

@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 from repro.kernels import ops, ref
 from repro.kernels.fused_attention import fused_attention
 from repro.kernels.fused_qproj_attention import fused_qproj_attention

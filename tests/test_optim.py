@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
                          compress_decompress, cosine_schedule,
                          error_feedback_init, int8_compress_with_feedback)

@@ -6,10 +6,10 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import analytical as an
-from repro.core import fusion
+from repro.core import fusion, spacegen, validation
 from repro.core import scheduler as sch
 from repro.core import workload as wl
-from repro.core.accelerator import pe_array_64x64
+from repro.core.accelerator import multi_core_array, pe_array_64x64
 
 ACCEL = pe_array_64x64()
 dims = st.sampled_from([64, 128, 192, 256, 384, 512])
@@ -67,6 +67,41 @@ def test_peak_independent_of_row_block(M, N, rb):
     b = sch.evaluate(head, ACCEL, fusion.lbl(),
                      row_block=max(1, M // 64))
     assert a.peak_active_words == b.peak_active_words
+
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data())
+def test_generated_schedules_all_validate_and_evaluate(data):
+    """Every schedule the generic generator emits — over attention
+    heads, FFNs and full transformer blocks, single- or multi-core —
+    passes the static validator and executes without IllegalSchedule."""
+    kind = data.draw(st.sampled_from(["head", "ffn", "block"]),
+                     label="workload kind")
+    if kind == "head":
+        M = data.draw(st.sampled_from([16, 32, 64]), label="M")
+        N = data.draw(st.sampled_from([16, 32, 64]), label="N")
+        w = wl.attention_head(M, N)
+    elif kind == "ffn":
+        mlp = data.draw(st.sampled_from(["silu_glu", "gelu"]), label="mlp")
+        w = wl.ffn(32, 32, 64, kind=mlp)
+    else:
+        heads = data.draw(st.sampled_from([2, 4]), label="heads")
+        kv = data.draw(st.sampled_from([1, 2]), label="kv")
+        norm = data.draw(st.sampled_from(["pre", "post"]), label="norm")
+        w = wl.transformer_block(16, 32, heads, 64, n_kv_heads=kv,
+                                 d_head=16, norm=norm)
+    n_cores = data.draw(st.sampled_from([1, 2]), label="cores")
+    accel = pe_array_64x64() if n_cores == 1 else multi_core_array(2)
+    opts = spacegen.SpaceOptions(max_orderings=3, max_cuts=6,
+                                 max_candidates=16)
+    cands = spacegen.generate(w, n_cores=n_cores, options=opts)
+    assert cands
+    for cand in cands:
+        assert validation.validate_schedule(w, cand) == [], cand.name
+    for cand in cands[:4]:
+        res = sch.evaluate(w, accel, cand, row_block=8)
+        assert res.latency_cycles > 0
+        assert res.macs == w.total_macs()
 
 
 @settings(max_examples=20, deadline=None)

@@ -2,6 +2,11 @@
 
 import dataclasses
 
+import pytest
+
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 import numpy as np

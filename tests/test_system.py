@@ -9,6 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
 from repro import configs
 from repro.launch.train import train_loop
 
