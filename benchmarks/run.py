@@ -24,6 +24,7 @@ MODULES = {
     "tableI_features": "benchmarks.tableI_features",
     "engine_bench": "benchmarks.engine_bench",
     "blocks_bench": "benchmarks.blocks_bench",
+    "phase_sweep": "benchmarks.phase_sweep",
     "kernel_bench": "benchmarks.kernel_bench",
     "roofline": "benchmarks.roofline",
 }

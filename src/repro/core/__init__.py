@@ -9,7 +9,14 @@
 # for ANY workload DAG — the named Fig. 5 presets in fusion are thin
 # wrappers over its assembly helper — and workload's builders cover
 # full transformer blocks (GQA attention, GLU/dense FFN, norms,
-# residuals) bridged from the model zoo via from_model_config.
+# residuals) bridged from the model zoo via from_model_config, whole
+# multi-block networks (workload.network) and both inference phases
+# (prefill self-attention / KV-cached decode); fusion.phase_schedule is
+# the phase-aware generalization of the paper's Fig. 6 decision rule.
+#
+# Units across the API: latency in cycles (Mcycles = 1e6 in reprs),
+# energy in pJ, memory in words (2 bytes/word; see
+# docs/architecture.md#units).
 from repro.core import (analytical, codesign, costmodel, engine,
                         interconnect, spacegen)
 from repro.core.accelerator import (Accelerator, Core, MemoryLevel,
@@ -18,19 +25,23 @@ from repro.core.accelerator import (Accelerator, Core, MemoryLevel,
 from repro.core.allocation import GAResult, heads_schedule, optimize_allocation
 from repro.core.costmodel import AnalyticalCostModel, CostModel
 from repro.core.dependencies import ALL, Requirement, required_inputs
-from repro.core.fusion import (best_schedule, explore, fuse_all, fuse_pv,
-                               fuse_q_qkt, lbl, multi_head_candidates,
-                               select_schedule)
+from repro.core.fusion import (PhasePlan, best_schedule, explore, fuse_all,
+                               fuse_pv, fuse_q_qkt, lbl,
+                               multi_head_candidates, phase_policy,
+                               phase_schedule, select_schedule)
 from repro.core.interconnect import Interconnect, LinkTimeline, Transfer
 from repro.core.nodes import ComputationNode, split_layer, split_workload
-from repro.core.scheduler import (IllegalSchedule, Result, Schedule, Stage,
-                                  evaluate, layer_by_layer)
-from repro.core.spacegen import SpaceOptions, chain_schedule, generate
+from repro.core.scheduler import (WORD_BYTES, IllegalSchedule, Result,
+                                  Schedule, Stage, evaluate, layer_by_layer)
+from repro.core.spacegen import (SpaceOptions, block_subworkload,
+                                 chain_schedule, generate)
 from repro.core.validation import validate, validate_all, validate_schedule
-from repro.core.workload import (INPUT, WEIGHT, Elementwise, Layer,
-                                 LayerNorm, MatMul, Softmax, Transpose,
-                                 Workload, attention_head, cct_mhsa, ffn,
-                                 from_model_config, gqa_attention, mhsa,
+from repro.core.workload import (INPUT, KVCACHE, PHASES, WEIGHT,
+                                 Elementwise, Layer, LayerNorm, MatMul,
+                                 Softmax, Transpose, Workload,
+                                 attention_head, cct_mhsa, ffn,
+                                 from_model_config, gqa_attention,
+                                 kv_cached_attention, mhsa, network,
                                  parallel_heads, transformer_block)
 
 __all__ = [
@@ -41,16 +52,18 @@ __all__ = [
     "GAResult", "heads_schedule", "optimize_allocation",
     "AnalyticalCostModel", "CostModel",
     "ALL", "Requirement", "required_inputs",
-    "best_schedule", "explore", "fuse_all", "fuse_pv", "fuse_q_qkt",
-    "lbl", "multi_head_candidates", "select_schedule",
+    "PhasePlan", "best_schedule", "explore", "fuse_all", "fuse_pv",
+    "fuse_q_qkt", "lbl", "multi_head_candidates", "phase_policy",
+    "phase_schedule", "select_schedule",
     "Interconnect", "LinkTimeline", "Transfer",
     "ComputationNode", "split_layer", "split_workload",
-    "IllegalSchedule", "Result", "Schedule", "Stage", "evaluate",
-    "layer_by_layer",
-    "SpaceOptions", "chain_schedule", "generate",
+    "WORD_BYTES", "IllegalSchedule", "Result", "Schedule", "Stage",
+    "evaluate", "layer_by_layer",
+    "SpaceOptions", "block_subworkload", "chain_schedule", "generate",
     "validate", "validate_all", "validate_schedule",
-    "INPUT", "WEIGHT", "Elementwise", "Layer", "LayerNorm", "MatMul",
-    "Softmax", "Transpose", "Workload", "attention_head", "cct_mhsa",
-    "ffn", "from_model_config", "gqa_attention", "mhsa",
+    "INPUT", "KVCACHE", "PHASES", "WEIGHT", "Elementwise", "Layer",
+    "LayerNorm", "MatMul", "Softmax", "Transpose", "Workload",
+    "attention_head", "cct_mhsa", "ffn", "from_model_config",
+    "gqa_attention", "kv_cached_attention", "mhsa", "network",
     "parallel_heads", "transformer_block",
 ]

@@ -57,6 +57,11 @@ def heads_schedule(M: int, N: int, allocation: tuple[int, ...],
 
 @dataclasses.dataclass
 class GAResult:
+    """Outcome of :func:`optimize_allocation`: the best head->core
+    ``allocation`` genome found, its ``fitness`` (cycles, plus the
+    optional memory/communication penalty terms), the full Step-5
+    ``Result`` it evaluated to, and the search effort spent."""
+
     allocation: tuple[int, ...]
     fitness: float
     result: sch.Result
@@ -77,7 +82,22 @@ def optimize_allocation(
     fitness_fn: Optional[Callable[[sch.Result], float]] = None,
 ) -> GAResult:
     """Steps 4+5 iteration: evolve head->core allocations, scoring each
-    with the Step-5 scheduler."""
+    with the Step-5 scheduler.
+
+    Args:
+        M, N:          head shape (rows x head dim) of each of the
+                       ``n_heads`` parallel heads.
+        accel:         the multi-core platform (links included).
+        policy:        per-head fusion policy name, or "auto" for the
+                       shape rule ``fusion.select_schedule``.
+        memory_weight: pJ-free blend factor — adds
+                       ``weight * max per-core peak (words)`` to the
+                       latency-cycles fitness.
+        comm_weight:   adds ``weight * comm_cycles`` likewise.
+        fitness_fn:    full override, ``Result -> float`` (lower wins).
+
+    Returns a :class:`GAResult`; deterministic for a given ``seed``.
+    """
     rng = random.Random(seed)
     n_cores = accel.n_cores
     workload = wl.parallel_heads(M, N, n_heads)

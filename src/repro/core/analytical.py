@@ -51,6 +51,46 @@ def alpha_limit_deep(M: int, N: int) -> float:
     return 3.0 * N / M
 
 
+# ---------------------------------------------------------------------------
+# Decode-phase (KV-cached) closed forms — the paper's Sec. IV analysis
+# redone for the regime its conclusion targets: M = 1..few new query
+# rows against an N_ctx-deep persistent K/V cache.  Cached K/V are not
+# active feature data, which moves the fusion crossover.
+# ---------------------------------------------------------------------------
+
+def a_lbl_kv(M: int, C: int, N: int) -> int:
+    """Peak active-feature memory (words) of the memory-optimal
+    layer-by-layer KV-cached head:  M * max(2N, C).
+
+    Args: M = new query rows, C = total context (score columns),
+    N = head dim.  Derivation: cached K/V never occupy active memory,
+    so the peak is either input + Q (2MN, live while the projections
+    drain the input) or the fully materialised M x C score matrix
+    (row substitution makes softmax memory-neutral)."""
+    return M * max(2 * N, C)
+
+
+def a_lf_kv(M: int, C: int, N: int) -> int:
+    """Peak active-feature memory (words) of the layer-fused KV-cached
+    head (QK^T -> softmax -> .V streamed, the Fig. 5c schedule applied
+    to the cached score pipeline): the M x C score matrix never
+    materialises and the peak is input + Q = 2MN, independent of the
+    context depth."""
+    return 2 * M * N
+
+
+def alpha_kv(M: int, C: int, N: int) -> float:
+    """Decode-phase relative memory gain  alpha = A_LF / A_LBL
+    = min(1, 2N / C).
+
+    The prefill crossover sits at M = N (Eq. 6); with the cache
+    holding K/V the crossover moves to C = 2N — beyond two head-dims
+    of context, score fusion always wins, and the gain grows linearly
+    in context depth (alpha -> 2N/C), which is why the decode phase is
+    where layer fusion matters most."""
+    return a_lf_kv(M, C, N) / a_lbl_kv(M, C, N)
+
+
 def attention_head_macs(M: int, N: int) -> int:
     """5 matmuls of the head: 3 projections (M.N.N) + QK^T (M.M.N) +
     (QK^T)V (M.M.N)."""

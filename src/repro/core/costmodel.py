@@ -63,17 +63,23 @@ class AnalyticalCostModel:
         compute = node.macs / core.effective_macs_per_cycle
         # memory movement (skip streamed operands: register-file forwarding)
         io_words = 0
+        rhs_idx = getattr(core, "rhs_level_index", 0)
         if isinstance(layer, wl.MatMul):
             if not streamed_in and layer.i1 != wl.WEIGHT:
                 io_words += node.n_rows * layer.s
             if not streamed_out:
                 io_words += node.n_rows * layer.cols
             rhs_words = layer.s * layer.cols  # right operand, multi-banked
+            if layer.i2 == wl.KVCACHE:
+                # the N_ctx-deep cache streams from the top memory
+                # level, not the multi-banked L1 — decode latency is
+                # cache-bandwidth bound, which is the phase asymmetry
+                # the schedule selector exploits
+                rhs_idx = len(core.levels) - 1
         else:
             io_words = 0 if streamed_in else node.n_rows * layer.cols
             rhs_words = 0
         io_bw = core.levels[0].bandwidth
-        rhs_idx = getattr(core, "rhs_level_index", 0)
         rhs_bw = core.levels[min(rhs_idx, len(core.levels) - 1)].bandwidth
         mem = max(io_words / io_bw, rhs_words / rhs_bw if rhs_words else 0.0)
         return max(compute, mem, 1.0)
@@ -95,6 +101,11 @@ class AnalyticalCostModel:
                 # weights fetched once per layer from the upper level
                 e += (layer.s * layer.cols / max(layer.rows, 1)) \
                     * node.n_rows * upper.read_energy
+            elif layer.i2 == wl.KVCACHE:
+                # cached K/V fetched once per layer from the top level
+                # (persistent memory, not active features)
+                e += (layer.s * layer.cols / max(layer.rows, 1)) \
+                    * node.n_rows * core.levels[-1].read_energy
             else:
                 feat_words += layer.s * layer.cols  # feature rhs re-read
         elif not streamed_in:

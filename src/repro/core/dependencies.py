@@ -101,11 +101,15 @@ def required_inputs(workload: wl.Workload, layer_name: str,
     layer = workload.layers[layer_name]
     reqs: list[Requirement] = []
     if isinstance(layer, wl.MatMul):
-        if layer.i1 != wl.WEIGHT:
+        if layer.i1 not in (wl.WEIGHT, wl.KVCACHE):
             reqs.append(_resolve_view(workload, layer.i1,
                                       (row_start, row_end)))
-        if layer.i2 != wl.WEIGHT:
+        if layer.i2 not in (wl.WEIGHT, wl.KVCACHE):
             reqs.append(_resolve_view(workload, layer.i2, ALL))
+        # cache-append gates: whole-tensor completion dependencies on
+        # the new K/V rows that must be in the cache before reading it
+        for g in layer.gated_by:
+            reqs.append(_resolve_view(workload, g, ALL))
     elif isinstance(layer, wl.Transpose):
         # materialised transpose: every output row reads a column of src
         reqs.append(_resolve_view(workload, layer.src, ALL))

@@ -28,6 +28,20 @@ Per-node latency/energy comes from an injectable ``CostModel``
 (``core/costmodel.py``); memory accounting preserves the Fig. 5
 rank-0/rank-1 event semantics of the seed exactly.
 
+Phase-aware accounting (decode / multi-block networks):
+
+* KV-cache appends (``Workload.cache_layers``) never allocate L1 —
+  the cache is persistent memory, globally visible once written
+  (no cross-core replica transfers), reported as
+  ``Result.kv_cache_words``;
+* a core switching network blocks (``Workload.block_of``) refills the
+  switched-to block's weights from off-chip: the switching node is
+  delayed by ``block weight words / offchip_bandwidth`` cycles and
+  the traffic/energy lands in ``Result.weight_reload_*``.  The first
+  block a core touches is ambient (covered by the per-layer weight
+  fetches of the cost model), so single-block results are
+  bit-identical to the seed.
+
 Transfers are modelled at consumer-node granularity: when a node needs
 rows [0, b) of a remote tensor, only the not-yet-moved suffix crosses
 the link, so row-pipelined cross-core streaming falls out naturally.
@@ -76,6 +90,10 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
     streamed_tensors = sch._streamed_tensors(workload, schedule)
     streamed_pairs = schedule.streamed_pairs()
     streamed_producers = {a for a, _ in streamed_pairs}
+    # KV-cache appends: persistent (non-active) memory — never allocated
+    # in L1, never freed, globally visible once written (the cache is a
+    # shared store, so no cross-core replica transfers either)
+    cache_set = workload.cache_layers
 
     # which core executes (and therefore "homes") each layer's output
     home_core: dict[str, int] = {}
@@ -177,6 +195,8 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
                         for i in rng:
                             rl[i] += 1
                         continue
+                    if req.producer in cache_set:
+                        continue
                     phome = home_core.get(req.producer)
                     if phome is not None and phome != st.core:
                         key = (req.producer, st.core)
@@ -254,7 +274,8 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
                 return None
             ready = done[covered - 1]
             phome = home_core.get(req.producer)
-            if phome is not None and phome != core:
+            if phome is not None and phome != core \
+                    and req.producer not in cache_set:
                 ready = _arrival(req.producer, phome, core, need_row,
                                  ready, commit, scratch)
             t = max(t, ready)
@@ -262,12 +283,15 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
 
     def apply_completion(node: cn.ComputationNode, core: int, t: float):
         layer = workload.layers[node.layer]
-        if node.layer not in streamed_tensors:
+        if node.layer not in streamed_tensors \
+                and node.layer not in cache_set:
             tensor_core.setdefault(node.layer, core)
             events.append((t, 0, core, node.n_rows * layer.cols))
         # release rows of inputs
         for req in deps.required_inputs(workload, node.layer,
                                         node.row_start, node.row_end):
+            if req.producer in cache_set:
+                continue       # cache contents are persistent: no frees
             # remote replica / stream-buffer countdown
             if req.producer != wl.INPUT:
                 phome = home_core.get(req.producer)
@@ -319,6 +343,25 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
             remaining=remaining))
         total_remaining += remaining
     cur = {c: 0 for c in core_list}
+
+    # per-(core, block) weight words: what a core must (re)load when it
+    # switches to executing another network block.  The per-layer L2
+    # weight fetches of the cost model stay as-is; this charges the
+    # *off-chip* refill of the weight level on block switches only, so
+    # single-block workloads are bit-identical to the seed.
+    block_of = workload.block_of
+    block_core_weights: dict[tuple[int, int], int] = {}
+    if block_of:
+        for st in schedule.stages:
+            for lname in st.layers:
+                ww = workload.layers[lname].weight_words()
+                if ww:
+                    key = (st.core, block_of.get(lname, 0))
+                    block_core_weights[key] = \
+                        block_core_weights.get(key, 0) + ww
+    resident_block: dict[int, int] = {}
+    reload_words = 0
+    reload_cycles = 0.0
 
     total_energy = 0.0
     total_feat_words = 0
@@ -373,6 +416,22 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
         dep_t = dep_ready_time(lname, node.row_start, node.row_end, c,
                                commit=True)
         start = max(res_free.get(rkey, 0.0), dep_t)
+        # weight residency: switching blocks refills this core's weight
+        # memory from off-chip (the first block a core touches is part
+        # of the ambient per-layer weight fetches, not a reload)
+        if block_of:
+            blk = block_of.get(lname, 0)
+            prev_blk = resident_block.get(c)
+            resident_block[c] = blk
+            if prev_blk is not None and prev_blk != blk:
+                rw = block_core_weights.get((c, blk), 0)
+                if rw:
+                    rc = rw / max(accel.offchip_bandwidth, 1e-9)
+                    start += rc
+                    reload_words += rw
+                    reload_cycles += rc
+                    total_energy += rw \
+                        * accel.core(c).levels[-1].read_energy
         layer = workload.layers[lname]
         s_in = any((p, lname) in streamed_pairs
                    for p in (layer.feature_inputs() or ()))
@@ -435,4 +494,7 @@ def execute(workload: wl.Workload, accel: Accelerator, schedule,
         comm_cycles=links.comm_cycles,
         comm_energy_pj=links.comm_energy_pj,
         link_utilization=links.utilization(makespan),
+        kv_cache_words=workload.kv_cache_words,
+        weight_reload_words=reload_words,
+        weight_reload_cycles=reload_cycles,
     )

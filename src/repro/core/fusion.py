@@ -155,8 +155,19 @@ def multi_head_candidates(n_heads: int, n_cores: int) -> list[sch.Schedule]:
 
 @dataclasses.dataclass
 class ExplorationResult:
+    """One explored (schedule, Result) pair; the repr prints latency
+    in Mcycles and peak active memory in words + KiB so benchmark
+    tables read unambiguously."""
+
     schedule: sch.Schedule
     result: sch.Result
+
+    def __repr__(self) -> str:
+        r = self.result
+        return (f"<{self.schedule.name}: "
+                f"{r.latency_mcycles:.3f} Mcycles, "
+                f"peak {r.peak_active_words} words "
+                f"({sch._kib(r.peak_active_words)})>")
 
 
 def explore(workload: Union[int, wl.Workload], N: Optional[int] = None,
@@ -186,6 +197,23 @@ def explore(workload: Union[int, wl.Workload], N: Optional[int] = None,
     ``latency_tolerance``: the paper searches for fused schedules at the
     *same optimal latency* as LBL; candidates slower than
     tolerance x best-latency are dropped.
+
+    Args:
+        workload: M (rows, int) for the paper's head — or any
+                  ``Workload``.
+        N:        head dim (only with the (M, N) entry point).
+        accel:    platform description (default ``pe_array_64x64``).
+        row_block: node granularity in rows (default: ~64 nodes per
+                  layer).
+
+    Returns the surviving ``ExplorationResult`` list, best first
+    (lowest peak active words, then lowest latency cycles).
+
+    >>> best = explore(4, 8)[0]           # M < N: fuse Q -> QK^T
+    >>> best.schedule.name
+    'fuse[Q->QKT]'
+    >>> best.result.peak_active_words     # == analytical.a_lf(4, 8)
+    80
     """
     accel = accel or pe_array_64x64()
     if isinstance(workload, wl.Workload):
@@ -262,3 +290,180 @@ def select_schedule(M: int, N: int) -> str:
 def predicted_alpha(M: int, N: int) -> float:
     """alpha for the selected schedule (== analytical.alpha)."""
     return analytical.alpha(M, N)
+
+
+# ---------------------------------------------------------------------------
+# Phase-aware (prefill vs decode) whole-network schedule selection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PhasePlan:
+    """The Fig. 6 decision rule generalized to inference phases at
+    network scale: which intermediates to fuse through in every block,
+    the predicted memory gain, and the assembled network schedule.
+
+    Units: ``alpha`` is the predicted A_fused / A_LBL ratio (< 1 means
+    fusion shrinks the active-feature peak); ``score_cols`` is C, the
+    width of each head's score matrix (M for prefill self-attention,
+    n_ctx for KV-cached decode).
+    """
+
+    phase: str                  # "prefill" | "decode"
+    M: int                      # query rows per block
+    score_cols: int             # score-matrix width C
+    head_dim: int               # N
+    fuse_q: bool                # stream Q into QK^T
+    fuse_scores: bool           # stream QK^T -> softmax -> .V
+    policy: str                 # named preset the flags correspond to
+    alpha: float                # predicted memory gain of the choice
+    workload: wl.Workload       # the n-block network
+    schedule: sch.Schedule      # the assembled network schedule
+
+
+def phase_policy(phase: str, M: int, score_cols: int,
+                 head_dim: int) -> tuple[bool, bool]:
+    """(fuse_q, fuse_scores) per the generalized decision rule.
+
+    Prefill (C == M) reduces exactly to the paper's Sec. IV.C.3 rule:
+    fuse through the largest intermediate — Q->QK^T for M < N, the
+    score pipeline for M > N, neither at M == N (Eq. 6: no gain).
+
+    Decode moves the crossover: cached K/V leave active memory, so
+    streaming Q into QK^T is always free gain (the projections drain
+    the input in place), and score fusion pays exactly when
+    ``alpha_kv < 1``, i.e. C > 2N (analytical.alpha_kv).
+    """
+    if phase == "prefill":
+        sel = select_schedule(M, head_dim)
+        return sel == "fuse_q_qkt", sel == "fuse_pv"
+    if phase == "decode":
+        return True, analytical.alpha_kv(M, score_cols, head_dim) < 1.0
+    raise ValueError(f"unknown phase {phase!r}")
+
+
+def _phase_block_stages(prefix: str, n_heads: int, n_kv_heads: int,
+                        mlp: str, norm: str,
+                        fuse_q: bool, fuse_scores: bool,
+                        core: int = 0) -> list[sch.Stage]:
+    """Stages of one network block under the chosen fusion flags.
+    Layer names follow ``workload._add_transformer_block``; the FFN and
+    norms run layer-by-layer (their intermediates are the block's
+    smallest)."""
+    p = prefix
+
+    def stage(*layers, streamed=()):
+        return sch.Stage(layers=tuple(layers),
+                         streamed=frozenset(streamed), core=core)
+
+    out: list[sch.Stage] = []
+    if norm == "pre":
+        out.append(stage(f"{p}ln1"))
+    for g in range(n_kv_heads):
+        out.append(stage(f"{p}kv{g}.K"))
+        out.append(stage(f"{p}kv{g}.V"))
+    for h in range(n_heads):
+        q, qkt = f"{p}h{h}.Q", f"{p}h{h}.QKT"
+        sm, av = f"{p}h{h}.SM", f"{p}h{h}.AV"
+        head = [q, qkt, sm, av]
+        edges = set()
+        if fuse_q:
+            edges.add((q, qkt))
+        if fuse_scores:
+            edges.update({(qkt, sm), (sm, av)})
+        # split the head chain into contiguous fused runs
+        cur = [head[0]]
+        for a, b in zip(head, head[1:]):
+            if (a, b) in edges:
+                cur.append(b)
+            else:
+                out.append(stage(*cur, streamed={e for e in edges
+                                                 if e[1] in cur}))
+                cur = [b]
+        out.append(stage(*cur, streamed={e for e in edges
+                                         if e[1] in cur}))
+        out.append(stage(f"{p}proj{h}"))
+        if h > 0:
+            out.append(stage(f"{p}acc{h}"))
+    out.append(stage(f"{p}res1"))
+    out.append(stage(f"{p}ln2" if norm == "pre" else f"{p}ln1"))
+    if mlp == "silu_glu":
+        ffn = ["gate", "up", "act", "mul", "down"]
+    elif mlp == "gelu":
+        ffn = ["up", "act", "down"]
+    else:   # keep in lockstep with workload._add_ffn
+        raise ValueError(f"unknown ffn kind {mlp!r}")
+    for l in ffn:
+        out.append(stage(f"{p}{l}"))
+    out.append(stage(f"{p}res2"))
+    if norm == "post":
+        out.append(stage(f"{p}ln2"))
+    return out
+
+
+def phase_schedule(config, phase: str, seq_len: int, *,
+                   decode_tokens: int = 1, n_blocks: int = 1,
+                   norm: str = "pre", layer_index: int = 0,
+                   fuse_q: Optional[bool] = None,
+                   fuse_scores: Optional[bool] = None) -> PhasePlan:
+    """Select and assemble the phase-aware whole-network schedule for
+    ``config`` (a ModelConfig-like object, see
+    ``workload.from_model_config``).
+
+    Args:
+        config:        architecture dims (duck-typed; any of
+                       ``repro.configs.ARCHS``).
+        phase:         "prefill" — ``seq_len`` is the prompt length M;
+                       "decode" — ``seq_len`` is the context depth
+                       n_ctx and ``decode_tokens`` (default 1) is M.
+        n_blocks:      how many blocks of the network to stitch.
+        fuse_q / fuse_scores: override the decision rule's fusion
+                       flags (e.g. to build a counterfactual
+                       prefill-style schedule for a decode workload,
+                       as benchmarks/phase_sweep.py does).
+
+    Returns a :class:`PhasePlan` whose ``schedule`` applies the same
+    per-head fusion decision in every block (identical blocks,
+    identical decisions) and whose ``alpha`` predicts the
+    active-feature gain per head (``analytical.alpha`` for prefill,
+    ``analytical.alpha_kv`` for decode).
+    """
+    dims = wl._config_dims(config, layer_index)
+    if phase == "prefill":
+        M, n_ctx = seq_len, 0
+        score_cols = M
+        alpha = analytical.alpha(M, dims["d_head"])
+    elif phase == "decode":
+        M, n_ctx = decode_tokens, seq_len
+        score_cols = n_ctx
+        alpha = analytical.alpha_kv(M, n_ctx, dims["d_head"])
+    else:
+        raise ValueError(f"unknown phase {phase!r}")
+    rule_q, rule_scores = phase_policy(phase, M, score_cols,
+                                       dims["d_head"])
+    fuse_q = rule_q if fuse_q is None else fuse_q
+    fuse_scores = rule_scores if fuse_scores is None else fuse_scores
+    net = wl.network(config, n_blocks, phase=phase, seq_len=M,
+                     n_ctx=n_ctx, norm=norm, layer_index=layer_index)
+    stages: list[sch.Stage] = []
+    for p in net.period_prefixes:
+        stages.extend(_phase_block_stages(
+            p, dims["n_heads"], dims["n_kv_heads"], dims["mlp"], norm,
+            fuse_q, fuse_scores))
+    policy = {(False, False): "lbl", (True, False): "fuse_q_qkt",
+              (False, True): "fuse_pv", (True, True): "fuse_all"}[
+        (fuse_q, fuse_scores)]
+    schedule = sch.Schedule(
+        name=f"phase[{phase}:{policy}]x{n_blocks}", stages=tuple(stages))
+    # the stage assembly mirrors workload's builder names; a desync
+    # (renamed layer, new FFN kind) must fail loudly here, not as an
+    # opaque engine deadlock later
+    from repro.core import validation
+    problems = validation.validate_schedule(net, schedule)
+    if problems:
+        raise sch.IllegalSchedule(
+            f"phase_schedule assembly out of sync with workload "
+            f"builders: {problems[:3]}")
+    return PhasePlan(phase=phase, M=M, score_cols=score_cols,
+                     head_dim=dims["d_head"], fuse_q=fuse_q,
+                     fuse_scores=fuse_scores, policy=policy,
+                     alpha=alpha, workload=net, schedule=schedule)

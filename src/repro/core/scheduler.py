@@ -37,7 +37,14 @@ Memory accounting (the paper's 'total active features memory'):
 * a tensor consumed on a different core than it was produced on is
   double-buffered: the replica occupies the consumer's L1 from its
   arrival over the link until the last consumer node on that core
-  completes, while the home copy follows row liveness as before.
+  completes, while the home copy follows row liveness as before;
+* KV-cache appends (``Workload.cache_layers``, decode phase) are
+  persistent memory, not active features: never allocated in L1 and
+  reported separately as ``Result.kv_cache_words``;
+* on multi-block networks (``Workload.block_of``), a core switching
+  blocks refills its weight memory off-chip —
+  ``Result.weight_reload_words/cycles`` (zero on single-block
+  workloads, which stay bit-identical to the seed).
 
 Accounting granularity (matches the paper's Fig. 5 bookkeeping exactly):
 row-range frees (substitutions — 'one row of the left input matrix can
@@ -94,6 +101,11 @@ class Stage:
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
+    """An ordered tuple of :class:`Stage` — the unit ``evaluate``
+    executes.  Stage order is per-core program order (cores progress
+    concurrently); see docs/schedule_format.md for the format and the
+    invariants ``validation.validate_schedule`` checks."""
+
     name: str
     stages: tuple[Stage, ...]
 
@@ -116,9 +128,30 @@ def layer_by_layer(workload: wl.Workload, core: int = 0,
     return Schedule(name="layer-by-layer", stages=stages)
 
 
+#: Bytes per feature word across the DSE engine (16-bit activations).
+#: All ``Result`` counters are in *words*; multiply by this to get
+#: bytes (the convention is documented once in docs/architecture.md).
+WORD_BYTES = 2
+
+
+def _kib(words: int) -> str:
+    """Human-readable byte rendering of a word count (2 B/word),
+    scaled to KiB / MiB / GiB."""
+    size = words * WORD_BYTES / 1024
+    for unit in ("KiB", "MiB"):
+        if size < 1024:
+            return f"{size:.1f} {unit}"
+        size /= 1024
+    return f"{size:.1f} GiB"
+
+
 @dataclasses.dataclass
 class Result:
-    """Evaluation of one (workload, accelerator, schedule) triple."""
+    """Evaluation of one (workload, accelerator, schedule) triple.
+
+    Units: latencies in cycles (``latency_mcycles`` for 1e6 cycles),
+    energies in pJ, memory in words (2 B/word, see ``WORD_BYTES``).
+    """
 
     schedule: str
     latency_cycles: float
@@ -133,10 +166,30 @@ class Result:
     comm_cycles: float = 0.0     # total link busy cycles
     comm_energy_pj: float = 0.0  # included in energy_pj as well
     link_utilization: dict = dataclasses.field(default_factory=dict)
+    # phase-aware accounting (zero for single-block prefill workloads)
+    kv_cache_words: int = 0          # persistent KV-cache footprint,
+    #                                  NOT part of peak_active_words
+    weight_reload_words: int = 0     # weights re-fetched off-chip when
+    #                                  a core switched network blocks
+    weight_reload_cycles: float = 0.0
 
     @property
     def latency_mcycles(self) -> float:
         return self.latency_cycles / 1e6
+
+    def __repr__(self) -> str:
+        extra = ""
+        if self.comm_cycles:
+            extra += f", comm={self.comm_cycles / 1e6:.3f} Mcycles"
+        if self.kv_cache_words:
+            extra += f", kv_cache={_kib(self.kv_cache_words)}"
+        if self.weight_reload_words:
+            extra += f", reload={_kib(self.weight_reload_words)}"
+        return (f"Result({self.schedule!r}, "
+                f"latency={self.latency_mcycles:.3f} Mcycles, "
+                f"energy={self.energy_pj / 1e6:.3f} uJ, "
+                f"peak_active={self.peak_active_words} words "
+                f"({_kib(self.peak_active_words)}){extra})")
 
 
 def _streamed_tensors(workload: wl.Workload,
@@ -165,6 +218,17 @@ def evaluate(workload: wl.Workload, accel: Accelerator, schedule: Schedule,
 
     Thin facade over the event-driven executor in ``core/engine.py``;
     ``cost_model`` defaults to the analytical ``costmodel.DEFAULT``.
+
+    Args:
+        workload:  the layer DAG to execute.
+        accel:     platform description (cores, memories, links).
+        row_block: node granularity in output rows (1 = the paper's
+                   finest split; peaks are granularity-invariant for
+                   these layer types).
+
+    Returns a :class:`Result` (cycles / pJ / words — see the units
+    table in docs/architecture.md).  Raises ``IllegalSchedule`` on
+    Step-2 or platform violations.
     """
     from repro.core import engine
     return engine.execute(workload, accel, schedule, row_block=row_block,

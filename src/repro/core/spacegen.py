@@ -58,8 +58,9 @@ from repro.core import scheduler as sch
 from repro.core import workload as wl
 
 __all__ = [
-    "SpaceOptions", "chain_schedule", "generate", "streamable_edges",
-    "fusion_chains", "stage_peak_bound", "core_work_bound",
+    "SpaceOptions", "block_subworkload", "chain_schedule", "generate",
+    "streamable_edges", "fusion_chains", "stage_peak_bound",
+    "core_work_bound",
 ]
 
 
@@ -67,12 +68,25 @@ __all__ = [
 class SpaceOptions:
     """Knobs bounding the generated space.  Defaults keep a full
     transformer block (hundreds of layers) in the low hundreds of
-    candidates."""
+    candidates.
+
+    ``periodic`` enables block-periodic symmetry on workloads built by
+    ``workload.network``: one block's sub-space is explored and
+    replicated across all blocks instead of re-enumerating every block
+    (network-scale spaces stay block-sized).  ``inter_block`` selects
+    the network-level placement axes: ``"df"`` (depth-first — every
+    block on the same cores as the sub-schedule, weights reload as the
+    cores move from block to block) and ``"bp"`` (block-pipelined —
+    block b's stages shift to core (c + b) % n_cores, weights stay
+    resident per core and activations cross the link at each block
+    boundary)."""
 
     max_orderings: int = 12       # linear extensions per fusion cut
     max_cuts: int = 48            # fusion-cut combinations
     max_candidates: int = 256     # total schedules after pruning
     placements: tuple[str, ...] = ("c0", "rr", "pipeline")
+    periodic: bool = True         # reuse one block's sub-space
+    inter_block: tuple[str, ...] = ("df", "bp")
 
 
 # ---------------------------------------------------------------------------
@@ -462,8 +476,8 @@ def stage_peak_bound(workload: wl.Workload, schedule: sch.Schedule) -> int:
     frees: dict[int, int] = {}
     for i, st in enumerate(schedule.stages):
         for l in st.layers:
-            if l in streamed:
-                continue
+            if l in streamed or l in workload.cache_layers:
+                continue        # never hits L1 / persistent KV cache
             words = workload.layers[l].out_words
             active += words
             keep = l in workload.outputs or l not in last_use
@@ -531,6 +545,85 @@ def _prune(workload: wl.Workload, tagged: list, cap: int) -> list:
 
 
 # ---------------------------------------------------------------------------
+# Block-periodic networks: explore one block, replicate across blocks
+# ---------------------------------------------------------------------------
+
+def block_subworkload(net: wl.Workload) -> wl.Workload:
+    """Extract the first block of a block-periodic network (built by
+    ``workload.network``) as a standalone workload: block-0 layers
+    only, with the block's boundary layer (the one the next block
+    consumes) as the output."""
+    if not net.period_prefixes:
+        raise ValueError(f"{net.name} is not block-periodic")
+    p0 = net.period_prefixes[0]
+    block0 = {n for n, b in net.block_of.items() if b == 0}
+    sub = wl.Workload(name=f"{net.name}[{p0}]",
+                      input_rows=net.input_rows,
+                      input_cols=net.input_cols)
+    boundary = None
+    for layer in net.topo_order():
+        if layer.name not in block0:
+            continue
+        sub.add(layer)
+        if any(c not in block0 for c in net._consumer_names
+               .get(layer.name, ())):
+            boundary = layer.name
+    if boundary is None:   # single-block network: its outputs stand
+        sub.outputs = net.outputs
+    else:
+        sub.outputs = (boundary,)
+    sub.cache_layers = net.cache_layers & block0
+    sub.kv_cache_words = net.kv_cache_words // max(net.n_blocks, 1)
+    return sub
+
+
+def _rename_stage(stage: sch.Stage, old: str, new: str,
+                  core: int) -> sch.Stage:
+    """Re-prefix a block-0 stage onto block ``new`` and core ``core``."""
+
+    def ren(n: str) -> str:
+        return new + n[len(old):] if n.startswith(old) else n
+
+    return sch.Stage(
+        layers=tuple(ren(n) for n in stage.layers),
+        streamed=frozenset((ren(a), ren(b)) for a, b in stage.streamed),
+        core=core)
+
+
+def _generate_periodic(net: wl.Workload, n_cores: int,
+                       options: SpaceOptions) -> list:
+    """Block-periodic generation: enumerate the sub-space of block 0
+    (cuts x orderings x placements) once, then replicate each
+    sub-schedule across every block — identical blocks receive
+    identical decisions, the inter-block axis chooses between
+    depth-first residency ("df": same cores every block, weights
+    reload at block switches) and block-pipelined residency ("bp":
+    blocks round-robin over cores, weights stay resident, activations
+    pay the link at each boundary).  Returns ``[(tag, schedule), ...]``
+    for ``_prune``."""
+    sub = block_subworkload(net)
+    subspace = generate(sub, n_cores, dataclasses.replace(
+        options, periodic=False))
+    prefixes = net.period_prefixes
+    p0 = prefixes[0]
+    modes = [m for m in options.inter_block
+             if m == "df" or n_cores > 1]
+    out: list = []
+    for si, subsched in enumerate(subspace):
+        for mode in modes or ["df"]:
+            stages: list = []
+            for b, pb in enumerate(prefixes):
+                shift = b if mode == "bp" else 0
+                for st in subsched.stages:
+                    stages.append(_rename_stage(
+                        st, p0, pb, (st.core + shift) % n_cores))
+            out.append(((si, mode), sch.Schedule(
+                name=f"net{len(prefixes)}x[{subsched.name}]@{mode}",
+                stages=tuple(stages))))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # The generator
 # ---------------------------------------------------------------------------
 
@@ -540,11 +633,35 @@ def generate(workload: wl.Workload, n_cores: int = 1,
     cores: fusion cuts x topological orderings x core placements,
     symmetry-broken, capped and dominance-pruned per ``options``.
 
-    The returned schedules are ready for ``scheduler.evaluate``; the
-    space provably contains the paper's hand-written attention-head
-    schedules (pinned by tests/test_spacegen.py).
+    For block-periodic networks (``workload.period_prefixes`` set by
+    ``workload.network``) with ``options.periodic`` (the default), one
+    block's sub-space is generated and replicated across all blocks
+    with the depth-first / block-pipelined inter-block axis — the
+    network space stays the size of one block's space.
+
+    Args:
+        workload: any ``Workload`` DAG.
+        n_cores:  cores of the target platform (placement axis).
+        options:  a :class:`SpaceOptions`; defaults keep block-sized
+                  graphs in the low hundreds of candidates.
+
+    Returns a list of ``scheduler.Schedule`` ready for
+    ``scheduler.evaluate``; the space provably contains the paper's
+    hand-written attention-head schedules (pinned by
+    tests/test_spacegen.py).
+
+    >>> from repro.core import workload as wl
+    >>> head = wl.attention_head(8, 8)
+    >>> scheds = generate(head, 1)
+    >>> len(scheds) > 0
+    True
+    >>> sorted({st.core for s in scheds for st in s.stages})
+    [0]
     """
     options = options or SpaceOptions()
+    if options.periodic and len(workload.period_prefixes) > 1:
+        return _prune(workload, _generate_periodic(
+            workload, n_cores, options), options.max_candidates)
     out: list = []        # ((cut index, placement tag), schedule)
     seen: set = set()
     for ci, fused in enumerate(_cuts(workload, options)):

@@ -89,6 +89,8 @@ def validate(seq_len: int, row_block: int = 1) -> ValidationPoint:
 
 
 def validate_all() -> list[ValidationPoint]:
+    """Both published sequence lengths (81 and 128), as
+    :class:`ValidationPoint` rows in MCycles."""
     return [validate(81), validate(128)]
 
 

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs subsystem (no dependencies, no
+network): every relative link target in the given files/directories
+must exist, and ``file#anchor`` fragments must match a heading slug in
+the target file.  External (http/https/mailto) links are not fetched.
+
+    python tools/check_links.py README.md docs
+
+Exits non-zero listing every broken link.  Also importable —
+``check_files(paths)`` returns the problem list (used by
+tests/test_docs.py, which keeps the check in the required fast tier).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links, optional "title" after the target
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+# reference-style definitions: [label]: target
+REF_DEF_RE = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+
+
+def _targets(text: str) -> list[str]:
+    """Link targets outside fenced code blocks (inline + reference
+    definitions)."""
+    prose = FENCE_RE.sub("", text)
+    return LINK_RE.findall(prose) + REF_DEF_RE.findall(prose)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style heading slug: lowercase, spaces to dashes, drop
+    everything but word characters and dashes."""
+    s = heading.strip().lower().replace(" ", "-")
+    return re.sub(r"[^\w-]", "", s)
+
+
+def _anchors(md: Path) -> set[str]:
+    return {_slug(h) for h in HEADING_RE.findall(md.read_text())}
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    """Problems with ``md``'s links, resolved relative to its parent."""
+    problems = []
+    for target in _targets(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if not dest.exists():
+            problems.append(f"{md.relative_to(root)}: broken link "
+                            f"-> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if _slug(anchor) not in _anchors(dest):
+                problems.append(f"{md.relative_to(root)}: missing "
+                                f"anchor -> {target}")
+    return problems
+
+
+def check_files(paths: list[Path], root: Path) -> list[str]:
+    problems = []
+    for p in paths:
+        mds = sorted(p.rglob("*.md")) if p.is_dir() else [p]
+        for md in mds:
+            problems.extend(check_file(md, root))
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = Path.cwd()
+    paths = [Path(a) for a in (argv or ["README.md", "docs"])]
+    problems = check_files(paths, root)
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"check_links: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
