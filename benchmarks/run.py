@@ -25,6 +25,7 @@ MODULES = {
     "engine_bench": "benchmarks.engine_bench",
     "blocks_bench": "benchmarks.blocks_bench",
     "phase_sweep": "benchmarks.phase_sweep",
+    "lowering_bench": "benchmarks.lowering_bench",
     "kernel_bench": "benchmarks.kernel_bench",
     "roofline": "benchmarks.roofline",
 }

@@ -76,6 +76,28 @@ def recommend_attention_tiling(
         block_q, block_kv = max(block_q, MXU), max(block_kv, MXU)
 
 
+def plan_tiling(phase: str, M: int, score_cols: int, d_head: int, *,
+                dtype_bytes: int = 2,
+                vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+                ) -> AttentionTiling:
+    """Plan-resolved tiling for the lowering subsystem: one tiling per
+    ``(phase, M, C, N)`` record instead of per kernel call site.
+
+    Prefill is self-attention (seq_q = M, seq_kv = C = M); decode runs
+    M = 1..few query rows against a C-deep cache, so block_q pins to
+    one MXU tile and the VMEM budget goes to streaming K/V
+    (block_kv)."""
+    if phase == "decode":
+        return recommend_attention_tiling(
+            max(M, 1), max(score_cols, 1), d_head,
+            dtype_bytes=dtype_bytes, vmem_budget_bytes=vmem_budget_bytes)
+    if phase == "prefill":
+        return recommend_attention_tiling(
+            max(M, 1), max(score_cols, M, 1), d_head,
+            dtype_bytes=dtype_bytes, vmem_budget_bytes=vmem_budget_bytes)
+    raise ValueError(f"unknown phase {phase!r}")
+
+
 def hbm_traffic_unfused(M: int, N: int, dtype_bytes: int = 2) -> int:
     """Bytes through HBM for the layer-by-layer score path: write+read of
     the M x M score matrix dominates (the paper's stored intermediate).

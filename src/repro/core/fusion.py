@@ -319,6 +319,24 @@ class PhasePlan:
     workload: wl.Workload       # the n-block network
     schedule: sch.Schedule      # the assembled network schedule
 
+    def evaluate(self, accel: Optional[Accelerator] = None,
+                 row_block: Optional[int] = None) -> sch.Result:
+        """Engine-execute the assembled schedule — the predicted
+        cycles/peak the lowering subsystem's validation harness
+        (tools/validate_costmodel.py) compares measured runs against."""
+        accel = accel or pe_array_64x64()
+        if row_block is None:
+            rows = max(l.rows for l in self.workload.layers.values())
+            row_block = max(1, rows // 64)
+        return sch.evaluate(self.workload, accel, self.schedule,
+                            row_block=row_block)
+
+    def __repr__(self) -> str:
+        return (f"<PhasePlan {self.phase} policy={self.policy} "
+                f"M={self.M} C={self.score_cols} N={self.head_dim} "
+                f"alpha={self.alpha:.3f} "
+                f"schedule={self.schedule.name!r}>")
+
 
 def phase_policy(phase: str, M: int, score_cols: int,
                  head_dim: int) -> tuple[bool, bool]:

@@ -1,0 +1,14 @@
+"""Pallas API compatibility aliases shared by the kernel modules.
+
+jax >= 0.6 renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``; alias whichever exists so the kernels import
+(and the interpret path runs on CPU CI) on both, without
+monkeypatching the jax module.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))

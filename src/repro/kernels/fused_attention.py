@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -145,7 +147,7 @@ def _fwd(q, k, v, *, causal, scale, q_offset, block_q, block_k, interpret):
             pltpu.VMEM((bq, LANES), jnp.float32),
             pltpu.VMEM((bq, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)
@@ -286,7 +288,7 @@ def _bwd(res, g, *, causal, scale, q_offset, block_q, block_k, interpret):
         out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr, dor, lser, deltar)
@@ -330,7 +332,7 @@ def _bwd(res, g, *, causal, scale, q_offset, block_q, block_k, interpret):
             pltpu.VMEM((bk, d), jnp.float32),
             pltpu.VMEM((bk, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

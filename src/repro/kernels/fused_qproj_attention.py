@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.kernels import fused_attention as fa
 
 NEG_INF = fa.NEG_INF
@@ -137,7 +139,7 @@ def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
             pltpu.VMEM((bq, LANES), jnp.float32),
             pltpu.VMEM((bq, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xr, wqr, kr, vr)

@@ -1,25 +1,35 @@
-"""Public kernel ops: schedule-aware dispatch wrappers.
+"""Public kernel ops: plan-driven dispatch wrappers.
 
 The paper's central result is that the optimal execution schedule of an
-attention head depends on its input shape (M vs N).  This module is
-where that decision meets the runtime:
+attention head depends on its input shape (M vs N) and phase (prefill
+vs KV-cached decode).  This module is where that decision meets the
+runtime:
 
-* ``attention``        — M > N regime (every assigned LM shape): the
-  Fig. 5c fused schedule.  Pallas kernel on TPU, lax fallback elsewhere.
-* ``qproj_attention``  — M < N regime (short-q / decode microbatches):
-  the Fig. 5b fused schedule (Q never stored).
-* ``schedule_for``     — the DSE engine's shape-driven selector
-  (core.fusion.select_schedule) exposed to model code.
+* ``attention``        — scores over given Q: the plan's
+  ``fused_attention`` path (Fig. 5c Pallas kernel / chunked-XLA
+  streaming fallback) or the materialising ``unfused`` reference.
+* ``qproj_attention``  — Fig. 5b/fuse_all path (Q = x @ Wq folded into
+  the score kernel; Q never stored).
+* ``schedule_for``     — the legacy shape-driven selector
+  (core.fusion.select_schedule), kept for the paper-rule API.
 * ``ssd``/``ssd_step`` — Mamba-2 SSD chunked scan / decode update.
 
-Block sizes default from core.codesign.recommend_attention_tiling — the
-analytical engine's step-3 mapping optimisation choosing the kernel
-tiling (hardware/mapping co-design, per the paper's DSE methodology).
+``impl="auto"`` resolution goes through the **ExecutionPlan IR**
+(``repro.lower``): the call's shapes resolve an LRU-cached plan keyed
+on ``(config, phase, seq/ctx bucket)``, whose kernel path and
+plan-resolved tiling (``codesign.plan_tiling``) drive the dispatch —
+the DSE engine's decision, not an ad-hoc backend check.  The serving
+stack passes its own ``plan`` (a ``lower.runtime.PlanDispatch``)
+instead, so whole-network phase decisions reach every block's kernel
+call.  Runtime deviations from the planned path (e.g. the
+masked-``lengths`` Pallas variant is not implemented) warn once and
+are recorded on the plan, so measured-vs-predicted tables never
+mislabel the executed path.
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -34,6 +44,8 @@ from repro.kernels.fused_qproj_attention import (
     fused_qproj_attention as _pallas_qproj_attn)
 from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
 from repro.kernels.xla_fallback import ssd_step  # re-export
+from repro.lower import cache as _plan_cache
+from repro.lower import runtime as _plan_rt
 
 __all__ = ["attention", "qproj_attention", "ssd", "ssd_step",
            "schedule_for", "default_impl"]
@@ -58,6 +70,68 @@ def _blocks(sq: int, skv: int, d: int, block_q, block_k):
     return block_q, block_k
 
 
+def _auto_dispatch(entry: str, sq: int, skv: int, d: int, hq: int,
+                   hkv: int, lengths_masked: bool,
+                   interpret: bool) -> Optional[_plan_rt.PlanDispatch]:
+    """Resolve ``impl="auto"`` through the plan cache.  Returns None
+    (caller falls back to the backend default) when the shapes are not
+    expressible as a DSE workload."""
+    try:
+        plan = _plan_cache.kernel_plan(seq_q=sq, seq_kv=skv, d_head=d,
+                                       n_heads=hq, n_kv_heads=hkv)
+        return _plan_rt.dispatch(plan, backend=jax.default_backend(),
+                                 interpret=interpret, entry=entry,
+                                 lengths_masked=lengths_masked)
+    except Exception:
+        return None
+
+
+_warned_lengths_downgrade = False
+
+
+def _downgrade_lengths(plan) -> str:
+    """pallas -> xla when a ``lengths`` mask is present: warn once
+    process-wide and record on the plan (if any) so validation tables
+    label the measured path truthfully."""
+    global _warned_lengths_downgrade
+    if not _warned_lengths_downgrade:
+        warnings.warn(
+            "attention: masked-lengths Pallas variant not implemented; "
+            "downgrading impl='pallas' to the chunked-XLA streaming "
+            "path (recorded on the ExecutionPlan; tracked §Perf)",
+            stacklevel=3)
+        _warned_lengths_downgrade = True
+    if plan is not None:
+        plan.plan.record_downgrade(
+            "masked-lengths Pallas variant not implemented "
+            "(tracked §Perf)", plan.path, plan.path)
+    return "xla"
+
+
+def _resolve(entry: str, impl: str, plan, sq: int, skv: int, d: int,
+             hq: int, hkv: int, lengths, block_q, block_k, interpret):
+    """Shared impl/tiling resolution for the attention entry points."""
+    if plan is not None:
+        if impl == "auto":
+            impl = plan.impl
+        block_q = block_q or plan.block_q
+        block_k = block_k or plan.block_k
+        interpret = interpret or plan.interpret
+    elif impl == "auto":
+        plan = _auto_dispatch(entry, sq, skv, d, hq, hkv,
+                              lengths is not None, interpret)
+        if plan is not None:
+            impl = plan.impl
+            block_q = block_q or plan.block_q
+            block_k = block_k or plan.block_k
+        else:
+            impl = default_impl()
+    block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
+    if lengths is not None and impl == "pallas":
+        impl = _downgrade_lengths(plan)
+    return impl, block_q, block_k, interpret
+
+
 def attention(q, k, v, *, causal: bool = True,
               scale: Optional[float] = None,
               q_offset: Optional[int] = None,
@@ -65,22 +139,23 @@ def attention(q, k, v, *, causal: bool = True,
               impl: str = "auto",
               block_q: Optional[int] = None,
               block_k: Optional[int] = None,
-              interpret: bool = False):
+              interpret: bool = False,
+              plan: Optional[_plan_rt.PlanDispatch] = None):
     """Layer-fused attention (paper Fig. 5c: QK^T -> softmax -> .V fused;
-    M x M scores never materialised).
+    M x M scores never materialised) or the plan's unfused reference.
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D[v]); GQA via Hq % Hkv == 0.
-    ``lengths``: (B,) valid kv prefix (decode w/ cache) — currently
-    routed to the lax path (scalar-prefetch Pallas variant is a tracked
-    §Perf item).
+    ``lengths``: (B,) valid kv prefix (decode w/ cache) — routed to the
+    lax path with a one-time warning + plan downgrade record (the
+    scalar-prefetch Pallas variant is a tracked §Perf item).
+    ``plan``: a resolved ``lower.runtime.PlanDispatch``; wins over the
+    auto resolution and receives downgrade records.
     """
     b, hq, sq, d = q.shape
-    skv = k.shape[2]
-    block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
-    if impl == "auto":
-        impl = default_impl()
-    if lengths is not None and impl == "pallas":
-        impl = "xla"
+    skv, hkv = k.shape[2], k.shape[1]
+    impl, block_q, block_k, interpret = _resolve(
+        "attention", impl, plan, sq, skv, d, hq, hkv, lengths,
+        block_q, block_k, interpret)
     if impl == "pallas":
         return _pallas_attn(q, k, v, causal, scale, q_offset,
                             block_q, block_k, interpret)
@@ -102,17 +177,16 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
                     impl: str = "auto",
                     block_q: Optional[int] = None,
                     block_k: Optional[int] = None,
-                    interpret: bool = False):
+                    interpret: bool = False,
+                    plan: Optional[_plan_rt.PlanDispatch] = None):
     """Layer-fused Q-projection attention (paper Fig. 5b: Q = x @ Wq fused
     into QK^T — Q never stored).  x: (B, Sq, E); wq: (E, Hq, D)."""
     b, sq, e = x.shape
-    d = wq.shape[-1]
-    skv = k.shape[2]
-    block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
-    if impl == "auto":
-        impl = default_impl()
-    if lengths is not None and impl == "pallas":
-        impl = "xla"
+    hq, d = wq.shape[1], wq.shape[-1]
+    skv, hkv = k.shape[2], k.shape[1]
+    impl, block_q, block_k, interpret = _resolve(
+        "qproj_attention", impl, plan, sq, skv, d, hq, hkv, lengths,
+        block_q, block_k, interpret)
     if impl == "pallas":
         return _pallas_qproj_attn(x, wq, k, v, causal, scale, q_offset,
                                   block_q, block_k, interpret)
@@ -135,7 +209,8 @@ def ssd(x, dt, a, b, c, d=None, *, chunk: int = 128,
         interpret: bool = False):
     """Mamba-2 SSD chunked scan.  The Pallas kernel is forward-only (the
     serving path); training/backward uses the differentiable lax
-    implementation (identical math)."""
+    implementation (identical math).  SSD blocks are not expressible as
+    DSE workloads yet, so ``impl="auto"`` stays the backend default."""
     if impl == "auto":
         impl = default_impl()
     if impl == "pallas" and h0 is None:

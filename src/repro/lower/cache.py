@@ -1,0 +1,141 @@
+"""The LRU plan cache: ``(config, phase, seq/ctx bucket)`` ->
+:class:`~repro.lower.plan.ExecutionPlan`.
+
+Lowering a schedule is host-side work (build the workload DAG, run the
+decision rule, statically validate the assembled schedule); doing it
+per kernel call would dwarf a decode step.  Plans are therefore cached
+per *bucket* of the sequence/context length:
+
+* **prefill** buckets the prompt length M to the next power of two
+  and lowers for the bucket's upper edge.  The M-vs-N decision is
+  constant across a bucket except when an edge straddles the paper's
+  M = N crossover; there the edge's decision applies, which is
+  memory-conservative (at M <= N the fused and LBL peaks coincide —
+  Eq. 6 — so no schedule in the bucket is mislabelled as a gain).
+* **decode** buckets the context depth C with the *first edge pinned
+  exactly at the analytical crossover* ``C = 2N``
+  (``analytical.alpha_kv = min(1, 2N/C)``): every C <= 2N shares the
+  no-gain bucket (alpha = 1, scores materialise), and C > 2N doubles
+  from 2N upward (alpha < 1 throughout each bucket, scores stream).
+  Crossing a bucket edge is what makes the serving engine re-resolve —
+  so the kernel path switches at runtime exactly where the cost model
+  says it should.
+
+ModelConfig is a frozen dataclass (hashable), so it is the cache key
+directly; synthetic shape-only keys (kernels/ops.py's ``impl="auto"``
+resolution, which has no ModelConfig in scope) use :class:`HeadConfig`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+from repro.lower import lowering
+from repro.lower.plan import ExecutionPlan
+
+__all__ = ["bucket_for", "resolve_plan", "plan_cache_info",
+           "clear_plan_cache", "HeadConfig", "kernel_plan"]
+
+
+def bucket_for(phase: str, n: int, head_dim: int) -> int:
+    """The cache bucket (its inclusive upper edge) holding length ``n``.
+
+    >>> bucket_for("decode", 40, 32)     # C <= 2N: the no-gain bucket
+    64
+    >>> bucket_for("decode", 65, 32)     # first fused bucket past 2N
+    128
+    >>> bucket_for("prefill", 200, 32)
+    256
+    """
+    n = max(int(n), 1)
+    edge = 2 * head_dim if phase == "decode" else 1
+    while edge < n:
+        edge *= 2
+    return edge
+
+
+@functools.lru_cache(maxsize=256)
+def _resolve(cfg, phase: str, bucket: int, decode_tokens: int,
+             n_blocks: int) -> ExecutionPlan:
+    if phase == "decode":
+        return lowering.lower(cfg, "decode", bucket,
+                              decode_tokens=decode_tokens,
+                              n_blocks=n_blocks, bucket=bucket)
+    return lowering.lower(cfg, "prefill", bucket, n_blocks=n_blocks,
+                          bucket=bucket)
+
+
+def resolve_plan(cfg, phase: str, seq_len: int, *,
+                 decode_tokens: int = 1,
+                 n_blocks: int = 1) -> ExecutionPlan:
+    """The cached ExecutionPlan governing ``seq_len`` (prompt rows for
+    prefill, context depth for decode).  ``cfg`` must be hashable
+    (ModelConfig is; duck-typed configs can use :class:`HeadConfig`)."""
+    dims_n = getattr(cfg, "head_dim", 0) or cfg.d_model // cfg.n_heads
+    bucket = bucket_for(phase, seq_len, dims_n)
+    if phase != "decode":
+        decode_tokens = 1   # irrelevant to prefill: normalise so the
+        #                     cache key stays one-entry-per-bucket
+    return _resolve(cfg, phase, bucket, decode_tokens, n_blocks)
+
+
+def plan_cache_info():
+    """`functools.lru_cache` statistics of the plan cache (hits /
+    misses / currsize) — surfaced by benchmarks/lowering_bench.py."""
+    return _resolve.cache_info()
+
+
+def clear_plan_cache() -> None:
+    _resolve.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Shape-only plan keys for kernel-level auto dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HeadConfig:
+    """A minimal hashable ModelConfig stand-in built from kernel-call
+    shapes, for plan resolution where no ModelConfig is in scope
+    (``kernels/ops.py`` ``impl="auto"``).  Duck-typed against
+    ``workload._config_dims``; d_ff is nominal (the FFN does not affect
+    the attention kernel path)."""
+
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    mlp: str = "silu_glu"
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head
+
+
+def kernel_plan(*, seq_q: int, seq_kv: int, d_head: int,
+                n_heads: int = 1, n_kv_heads: int = 1,
+                phase: Optional[str] = None) -> ExecutionPlan:
+    """Resolve the ExecutionPlan governing one attention kernel call
+    from its shapes alone.
+
+    Phase inference when not given: a handful of query rows against a
+    deeper key/value buffer is the decode regime (KV-cached scores);
+    anything else is prefill/train self-attention."""
+    if phase is None:
+        phase = "decode" if (seq_q <= 4 and seq_kv > seq_q) else "prefill"
+    if n_heads % max(n_kv_heads, 1):
+        n_kv_heads = 1              # grouping must divide; degrade to MQA
+    cfg = HeadConfig(
+        name=f"head{n_heads}x{d_head}", d_model=n_heads * d_head,
+        n_heads=n_heads, n_kv_heads=max(n_kv_heads, 1), d_head=d_head,
+        d_ff=4 * n_heads * d_head)
+    n = seq_kv if phase == "decode" else seq_q
+    return resolve_plan(cfg, phase, n, decode_tokens=max(seq_q, 1))

@@ -1,0 +1,93 @@
+"""Schedule lowering: compile a ``fusion.PhasePlan`` into an
+:class:`~repro.lower.plan.ExecutionPlan`.
+
+This is the "compiler" half of the lowering subsystem: given the
+DSE-chosen whole-network schedule for one phase, emit the per-block
+executable records — kernel path, plan-resolved tiling
+(``codesign.plan_tiling``), stream-vs-materialise sets — that
+``kernels/ops.py`` and the serving engine dispatch on.  The cache in
+``lower/cache.py`` memoizes the result per ``(config, phase, bucket)``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import codesign
+from repro.core import fusion
+from repro.core import workload as wl
+from repro.lower.plan import BlockPlan, ExecutionPlan
+
+__all__ = ["lower_phase_plan", "lower"]
+
+
+def lower_phase_plan(pp: fusion.PhasePlan, *,
+                     bucket: Optional[int] = None) -> ExecutionPlan:
+    """Lower one :class:`fusion.PhasePlan` into an ExecutionPlan.
+
+    Every block of the network gets its own :class:`BlockPlan`;
+    because ``phase_schedule`` applies the same decision in every
+    (identical) block, the records are homogeneous — asserted here so
+    the scanned-runtime assumption (one kernel choice per phase,
+    ``models/transformer.forward`` scans identical layers) can never
+    silently diverge from the IR.
+    """
+    n_blocks = max(len(pp.workload.period_prefixes), 1)
+    tiling = codesign.plan_tiling(pp.phase, pp.M, pp.score_cols,
+                                  pp.head_dim)
+    blocks = tuple(
+        BlockPlan.build(i, pp.phase, pp.policy, pp.fuse_q,
+                        pp.fuse_scores, tiling)
+        for i in range(n_blocks))
+    assert len({(b.kernel_path, b.tiling) for b in blocks}) == 1, \
+        "identical blocks must lower to identical records"
+    return ExecutionPlan(
+        config_name=pp.workload.name,
+        phase=pp.phase, M=pp.M, score_cols=pp.score_cols,
+        head_dim=pp.head_dim, n_blocks=n_blocks,
+        bucket=bucket if bucket is not None else pp.score_cols,
+        alpha=pp.alpha, crossover_ctx=2 * pp.head_dim,
+        blocks=blocks, source=pp)
+
+
+def lower(cfg, phase: str, seq_len: int, *, decode_tokens: int = 1,
+          n_blocks: int = 1, bucket: Optional[int] = None,
+          fuse_q: Optional[bool] = None,
+          fuse_scores: Optional[bool] = None) -> ExecutionPlan:
+    """Select (``fusion.phase_schedule``) and lower in one step.
+
+    Args:
+        cfg:       a ModelConfig-like object (see
+                   ``workload.from_model_config``; GQA/MHA only).
+        phase:     "prefill" (``seq_len`` = prompt rows M) or "decode"
+                   (``seq_len`` = context depth C,
+                   ``decode_tokens`` = M).
+        bucket:    the seq/ctx bucket this plan will be cached under
+                   (recorded on the plan; defaults to the score width).
+        fuse_q / fuse_scores: override the decision rule (used by the
+                   validation harness to lower counterfactual
+                   schedules — e.g. the LBL baseline for a shape whose
+                   optimum is fused).
+    """
+    pp = fusion.phase_schedule(cfg, phase, seq_len,
+                               decode_tokens=decode_tokens,
+                               n_blocks=n_blocks, fuse_q=fuse_q,
+                               fuse_scores=fuse_scores)
+    plan = lower_phase_plan(pp, bucket=bucket)
+    # keep the registry name (workload names embed M/C, which would
+    # fragment table rows) when the config carries one
+    name = getattr(cfg, "name", None)
+    if name:
+        plan.config_name = name
+    return plan
+
+
+def supported(cfg) -> bool:
+    """True when ``cfg`` is expressible as a DSE workload (GQA/MHA
+    attention blocks); MLA/SSM/hybrid configs are not lowerable yet and
+    the serving layer falls back to the config-driven dispatch."""
+    try:
+        wl._config_dims(cfg)
+        return True
+    except (ValueError, AttributeError):
+        return False

@@ -1,0 +1,184 @@
+"""Plan-driven dispatch: turn an ExecutionPlan into the concrete
+kernel arguments one forward pass needs, and re-resolve plans as the
+serving context grows.
+
+Two layers:
+
+* :func:`dispatch` — legalise one plan for one call site: map the
+  kernel path onto an ``ops`` impl string for the backend, downgrade
+  paths the runtime cannot execute (Q-projection fusion under
+  RoPE/qk-norm; the masked-lengths Pallas variant), and record every
+  deviation on the plan so validation tables label measured numbers
+  with the path actually run.
+* :class:`ServingPlan` — the serving engine's handle: holds the
+  config, resolves the prefill plan once and the decode plan per
+  context *bucket* (``lower.cache``), logging each re-resolution.  The
+  first decode bucket edge sits at the analytical crossover
+  ``C = 2N`` (``analytical.alpha_kv``), so a generation that starts
+  inside two head-widths of context visibly switches kernel path the
+  step its KV cache crosses it.
+
+Pure Python (no JAX import): callers pass the backend string
+(``jax.default_backend()``) in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.lower import cache as plan_cache
+from repro.lower import lowering
+from repro.lower.plan import (FUSED_ATTENTION, QPROJ_ATTENTION, UNFUSED,
+                              ExecutionPlan)
+
+__all__ = ["PlanDispatch", "dispatch", "impl_for", "ServingPlan",
+           "serving_plan"]
+
+
+def impl_for(path: str, backend: str = "cpu",
+             interpret: bool = False) -> str:
+    """Map a kernel path onto a ``kernels.ops`` impl string.  Fused
+    paths lower to Pallas on TPU (or anywhere under interpret mode)
+    and to the chunked-XLA streaming fallback elsewhere; the unfused
+    path is the materialising reference."""
+    if path == UNFUSED:
+        return "reference"
+    return "pallas" if (backend == "tpu" or interpret) else "xla"
+
+
+@dataclasses.dataclass
+class PlanDispatch:
+    """Everything one attention call site needs from the plan: the
+    legalised path, the impl string, the plan-resolved tiling, and the
+    back-pointer for downgrade recording."""
+
+    plan: ExecutionPlan
+    path: str                   # legalised kernel path
+    impl: str                   # pallas | xla | reference
+    block_q: int
+    block_k: int
+    interpret: bool = False
+
+    @property
+    def fuse_q(self) -> bool:
+        return self.path == QPROJ_ATTENTION
+
+    def __repr__(self) -> str:
+        return (f"<PlanDispatch {self.path}/{self.impl} "
+                f"blocks=({self.block_q},{self.block_k}) of {self.plan!r}>")
+
+
+def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
+             interpret: bool = False, entry: str = "attention",
+             rope: bool = False, qk_norm: bool = False,
+             lengths_masked: bool = False) -> PlanDispatch:
+    """Legalise ``plan`` for one call site.
+
+    Args:
+        entry:   "attention" (Q given — the model runtime) or
+                 "qproj_attention" (x and Wq given — the raw-kernel
+                 harness).  Q-projection fusion needs the latter.
+        rope / qk_norm: transformations applied between the Q
+                 projection and the scores; either breaks Q-fusion.
+        lengths_masked: the call carries a ``lengths`` mask (decode
+                 over a partially-filled cache); the Pallas kernels
+                 have no masked variant yet, so fused paths fall back
+                 to the chunked-XLA streaming path (recorded).
+    """
+    path = plan.kernel_path
+    if path == QPROJ_ATTENTION:
+        blocked = []
+        if entry != "qproj_attention":
+            blocked.append("Q already materialised at this call site")
+        if rope:
+            blocked.append("RoPE between projection and scores")
+        if qk_norm:
+            blocked.append("qk-norm between projection and scores")
+        if blocked:
+            new = FUSED_ATTENTION if plan.block(0).fuse_scores else UNFUSED
+            plan.record_downgrade("; ".join(blocked), path, new)
+            path = new
+    impl = impl_for(path, backend, interpret)
+    if lengths_masked and impl == "pallas":
+        plan.record_downgrade(
+            "masked-lengths Pallas variant not implemented "
+            "(tracked §Perf)", path, path)
+        impl = "xla"
+    t = plan.tiling
+    return PlanDispatch(plan=plan, path=path, impl=impl,
+                        block_q=t.block_q, block_k=t.block_kv,
+                        interpret=interpret)
+
+
+@dataclasses.dataclass
+class ServingPlan:
+    """The serving engine's plan handle for one model.
+
+    ``prefill_dispatch``/``decode_dispatch`` resolve through the LRU
+    plan cache; ``resolutions`` logs every (phase, length, bucket,
+    path) the engine acted on — the end-to-end tests assert the decode
+    path switch across ``crossover_ctx`` from this log.
+    """
+
+    cfg: object
+    max_len: int
+    backend: str = "cpu"
+    interpret: bool = False
+    n_blocks: int = 1
+    resolutions: list = dataclasses.field(default_factory=list)
+
+    @property
+    def head_dim(self) -> int:
+        return getattr(self.cfg, "head_dim", 0) or \
+            self.cfg.d_model // self.cfg.n_heads
+
+    @property
+    def crossover_ctx(self) -> int:
+        """The analytical decode crossover C = 2N (alpha_kv < 1 beyond
+        it): the first plan-cache bucket edge, hence the first runtime
+        kernel-path switch."""
+        return 2 * self.head_dim
+
+    def _dispatch(self, phase: str, n: int) -> PlanDispatch:
+        plan = plan_cache.resolve_plan(self.cfg, phase, n,
+                                       n_blocks=self.n_blocks)
+        d = dispatch(plan, backend=self.backend, interpret=self.interpret,
+                     entry="attention",
+                     rope=getattr(self.cfg, "rope_theta", 0) > 0,
+                     qk_norm=getattr(self.cfg, "qk_norm", False),
+                     lengths_masked=True)
+        self.resolutions.append((phase, n, plan.bucket, d.path, d.impl))
+        return d
+
+    def prefill_dispatch(self, seq_len: int) -> PlanDispatch:
+        return self._dispatch("prefill", seq_len)
+
+    def decode_dispatch(self, ctx_len: int) -> PlanDispatch:
+        """The plan governing one decode step whose scores span
+        ``ctx_len`` columns (cache prefix + the new token)."""
+        return self._dispatch("decode", min(max(ctx_len, 1),
+                                            self.max_len))
+
+    def concrete_ctx(self, cache_len) -> int:
+        """Host-side context length from a DecodeState's ``cache_len``
+        scalar; under a trace (abstract value) fall back to the buffer
+        capacity — the conservative deepest-context plan."""
+        try:
+            return int(cache_len)
+        except Exception:
+            return self.max_len
+
+
+def serving_plan(cfg, max_len: int, *, backend: str = "cpu",
+                 interpret: bool = False,
+                 n_blocks: Optional[int] = None) -> Optional[ServingPlan]:
+    """Build the ServingPlan for ``cfg``, or None when the config is
+    not lowerable (MLA/SSM/hybrid blocks) — the serving engine then
+    keeps its config-driven dispatch."""
+    if not lowering.supported(cfg):
+        return None
+    if n_blocks is None:
+        n_blocks = getattr(cfg, "n_layers", 1) or 1
+    return ServingPlan(cfg=cfg, max_len=max_len, backend=backend,
+                       interpret=interpret, n_blocks=n_blocks)

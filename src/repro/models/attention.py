@@ -7,8 +7,14 @@ Schedule selection (the paper's contribution as a runtime feature):
     (ops.attention), score matrix never materialised;
   * decode:        M = 1 << N              -> Fig. 5b regime; the Q
     projection folds into the kernel (ops.qproj_attention) so Q never
-    hits HBM.  `use_qproj_fusion` applies it when legal (no qk-norm —
-    norm between projection and scores breaks the fusion; noted).
+    hits HBM.  Q-fusion is only legal without RoPE/qk-norm between
+    projection and scores; the lowering layer records the downgrade.
+
+The decision reaches this module two ways: ``impl="auto"`` resolves an
+LRU-cached ExecutionPlan from the call shapes inside kernels/ops.py,
+or the serving engine passes a ``lower.runtime.PlanDispatch`` (the
+``plan`` kwarg) carrying the whole-network phase decision, plan-resolved
+tiling, and the downgrade ledger.
 
 KV caches: GQA stores (k, v) per layer; MLA stores the *latent* cache
 (c_kv + rope key), decoding in absorbed form — (B, S, 576) instead of
@@ -52,15 +58,31 @@ def init_gqa(key, cfg: ModelConfig):
     return p
 
 
+def _plan_kernel_args(cfg: ModelConfig, plan, interpret: bool):
+    """(impl, block_q, block_k, interpret) for one attention call: the
+    PlanDispatch wins when given (the plan was resolved for this
+    config/phase/context and records its own downgrades); otherwise
+    the config-driven defaults."""
+    if plan is None:
+        return (cfg.attn_impl, cfg.attn_block_q, cfg.attn_block_k,
+                interpret)
+    return "auto", plan.block_q, plan.block_k, \
+        interpret or plan.interpret
+
+
 def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
-                interpret: bool = False):
+                interpret: bool = False,
+                plan=None):
     """x: (B, S, D).  With cache: append k/v at cache_len, attend over
-    the valid prefix (decode / chunked prefill)."""
+    the valid prefix (decode / chunked prefill).  ``plan``: a resolved
+    ``lower.runtime.PlanDispatch`` routing this block through its
+    DSE-assigned kernel path."""
     dt = x.dtype
     b, s, _ = x.shape
     decode = cache is not None
+    impl, bq, bk, interpret = _plan_kernel_args(cfg, plan, interpret)
 
     def project_kv():
         k = jnp.einsum("bsd,dhe->bhse", x, params["wk"].astype(dt))
@@ -96,22 +118,19 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
             from repro.serve.distributed_decode import \
                 distributed_decode_attention
             o = distributed_decode_attention(
-                q, k_buf.astype(dt), v_buf.astype(dt), lengths)
+                q, k_buf.astype(dt), v_buf.astype(dt), lengths,
+                plan=plan)
         else:
             o = ops.attention(q, k_buf.astype(dt), v_buf.astype(dt),
                               causal=cfg.causal, q_offset=cache_len,
                               lengths=lengths,
-                              impl=cfg.attn_impl,
-                              block_q=cfg.attn_block_q,
-                              block_k=cfg.attn_block_k,
-                              interpret=interpret)
+                              impl=impl, block_q=bq, block_k=bk,
+                              interpret=interpret, plan=plan)
     else:
         new_cache = None
         o = ops.attention(q, k_new, v_new, causal=cfg.causal,
-                          impl=cfg.attn_impl,
-                          block_q=cfg.attn_block_q,
-                          block_k=cfg.attn_block_k,
-                          interpret=interpret)
+                          impl=impl, block_q=bq, block_k=bk,
+                          interpret=interpret, plan=plan)
     o = constrain(o, "batch", "heads", "seq", "head_dim")
     out = jnp.einsum("bhse,hed->bsd", o, params["wo"].astype(dt))
     return out, new_cache
@@ -173,12 +192,16 @@ def _mla_latent(params, cfg, x, positions, dt):
 def mla_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
-                interpret: bool = False):
+                interpret: bool = False,
+                plan=None):
     """Prefill/train: non-absorbed (per-head K/V, fused kernel, causal).
     Decode: absorbed MQA form over the latent cache (d_k = r_kv + rope,
-    d_v = r_kv) — one shared latent 'kv head'."""
+    d_v = r_kv) — one shared latent 'kv head'.  MLA blocks are not
+    lowerable to DSE workloads yet, so ``plan`` only overrides the
+    kernel args when a caller resolved one by hand."""
     dt = x.dtype
     b, s, _ = x.shape
+    impl, bq, bk, interpret = _plan_kernel_args(cfg, plan, interpret)
     q_nope, q_rope = _mla_q(params, cfg, x, positions, dt)
     c, k_rope = _mla_latent(params, cfg, x, positions, dt)
 
@@ -192,8 +215,8 @@ def mla_forward(params, cfg: ModelConfig, x, positions, *,
                                        cfg.qk_rope_head_dim))], axis=-1)
         scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
         o = ops.attention(q, k, v, causal=cfg.causal, scale=scale,
-                          impl=cfg.attn_impl, block_q=cfg.attn_block_q,
-                          block_k=cfg.attn_block_k, interpret=interpret)
+                          impl=impl, block_q=bq, block_k=bk,
+                          interpret=interpret, plan=plan)
         new_cache = None
     else:
         # absorbed: q' = q_nope @ W_UK -> latent space
@@ -212,10 +235,9 @@ def mla_forward(params, cfg: ModelConfig, x, positions, *,
         o_lat = ops.attention(q_full, k_lat, v_lat, causal=cfg.causal,
                               q_offset=cache_len,
                               scale=scale, lengths=lengths,
-                              impl=cfg.attn_impl,
-                              block_q=cfg.attn_block_q,
-                              block_k=cfg.attn_block_k,
-                              interpret=interpret)      # (B,H,S,r_kv)
+                              impl=impl, block_q=bq, block_k=bk,
+                              interpret=interpret,
+                              plan=plan)                # (B,H,S,r_kv)
         o = jnp.einsum("bhsr,rhe->bhse", o_lat, params["wv_b"].astype(dt))
 
     out = jnp.einsum("bhse,hed->bsd", o, params["wo"].astype(dt))

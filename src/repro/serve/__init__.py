@@ -1,7 +1,8 @@
 from repro.serve.engine import (DecodeState, decode_step, greedy_sample,
-                                init_decode_state, prefill, serve_step)
+                                init_decode_state, make_serving_plan,
+                                prefill, serve_step)
 from repro.serve.batcher import Request, RequestBatcher
 
 __all__ = ["DecodeState", "decode_step", "greedy_sample",
-           "init_decode_state", "prefill", "serve_step",
-           "Request", "RequestBatcher"]
+           "init_decode_state", "make_serving_plan", "prefill",
+           "serve_step", "Request", "RequestBatcher"]

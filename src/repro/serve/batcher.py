@@ -6,6 +6,16 @@ request.  The device-side state is one DecodeState; per-slot lengths
 live host-side.  Straggler note: at multi-host scale the batcher runs
 on host 0 and broadcasts slot assignments with the token batch — decode
 steps stay SPMD.
+
+Plan-awareness: the batcher tracks per-slot context lengths
+(prompt + generated so far), so with a ``lower.runtime.ServingPlan``
+the ``run`` loop resolves the ExecutionPlan governing the *deepest*
+active context each step and hands it to ``decode_fn`` — one SPMD
+decode step takes one kernel path, so the batch is planned for its
+longest row (the conservative direction: fusion gain only grows with
+context).  ``max_len`` bounds the cache geometry: prompts that cannot
+fit are rejected at ``submit``, and generation budgets are clamped so
+no row can overrun its cache.
 """
 
 from __future__ import annotations
@@ -27,14 +37,29 @@ class Request:
 
 
 class RequestBatcher:
-    def __init__(self, batch_size: int, eos_id: int = -1):
+    def __init__(self, batch_size: int, eos_id: int = -1,
+                 max_len: Optional[int] = None):
         self.batch_size = batch_size
         self.eos_id = eos_id
+        self.max_len = max_len
         self.queue: deque = deque()
         self.slots: list = [None] * batch_size
+        self.slot_lens: list = [0] * batch_size   # prompt + generated
         self.finished: list = []
 
     def submit(self, req: Request) -> None:
+        """Queue a request.  Legal while ``run`` is mid-flight (the
+        next ``_fill_slots`` picks it up).  With ``max_len`` set, a
+        prompt that cannot fit the cache (no room for even one new
+        token) is rejected, and the generation budget is clamped so
+        prompt + generated never overruns the cache."""
+        if self.max_len is not None:
+            if len(req.prompt) >= self.max_len:
+                raise ValueError(
+                    f"request {req.uid}: prompt length {len(req.prompt)} "
+                    f">= max_len {self.max_len} leaves no room to decode")
+            req.max_new_tokens = min(req.max_new_tokens,
+                                     self.max_len - len(req.prompt))
         self.queue.append(req)
 
     def _fill_slots(self) -> list:
@@ -42,12 +67,21 @@ class RequestBatcher:
         for i in range(self.batch_size):
             if self.slots[i] is None and self.queue:
                 self.slots[i] = self.queue.popleft()
+                self.slot_lens[i] = len(self.slots[i].prompt)
                 newly.append(i)
         return newly
 
     @property
     def active(self) -> bool:
         return any(s is not None for s in self.slots) or bool(self.queue)
+
+    @property
+    def context_len(self) -> int:
+        """Deepest active context (prompt + generated) across slots —
+        what the next decode step's score width is planned for."""
+        return max((self.slot_lens[i]
+                    for i, s in enumerate(self.slots) if s is not None),
+                   default=0)
 
     def step(self, next_tokens: np.ndarray) -> None:
         """Feed back one decoded token per slot."""
@@ -56,23 +90,32 @@ class RequestBatcher:
                 continue
             tok = int(next_tokens[i])
             req.generated.append(tok)
+            self.slot_lens[i] += 1
             if tok == self.eos_id or \
                     len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 self.finished.append(req)
                 self.slots[i] = None
+                self.slot_lens[i] = 0
 
     def run(self, prefill_fn: Callable, decode_fn: Callable,
-            max_steps: int = 1000) -> list:
+            max_steps: int = 1000, plan=None) -> list:
         """Drive the loop: prefill_fn(slot_ids, prompts) seeds caches,
-        decode_fn() -> (B,) next tokens."""
+        decode_fn() -> (B,) next tokens.  With a ``ServingPlan``,
+        decode_fn is instead called as decode_fn(dispatch) where
+        ``dispatch`` is the PlanDispatch for the batch's deepest
+        context + 1 (the step about to run)."""
         steps = 0
         while self.active and steps < max_steps:
             new_slots = self._fill_slots()
             if new_slots:
                 prefill_fn(new_slots,
                            [self.slots[i].prompt for i in new_slots])
-            toks = decode_fn()
+            if plan is not None:
+                toks = decode_fn(
+                    plan.decode_dispatch(self.context_len + 1))
+            else:
+                toks = decode_fn()
             self.step(np.asarray(toks))
             steps += 1
         return self.finished

@@ -1,8 +1,17 @@
-"""Serving: prefill + decode with per-layer caches.
+"""Serving: prefill + decode with per-layer caches, plan-aware.
 
-Decode is the paper's M<N regime (one query row vs wide embeddings):
-the schedule selector picks the Fig. 5b fusion — Q folded into the
-score kernel — while prefill (M>N) uses the Fig. 5c fused kernel.
+Decode is the paper's M<N regime (one query row vs wide embeddings);
+with a KV cache the analytical crossover moves to C = 2N
+(``analytical.alpha_kv``): beyond two head-widths of context the
+score pipeline should stream, below it materialising is free.  The
+serving engine exercises that decision at runtime: pass a
+``lower.runtime.ServingPlan`` and every ``prefill``/``decode_step``
+resolves the ExecutionPlan governing the current context (LRU-cached
+per ``(config, phase, ctx bucket)``), re-resolving — and switching
+kernel path — when the KV context crosses a bucket edge; the first
+edge is the crossover itself.  Without a plan the config-driven
+dispatch is unchanged.
+
 Caches: GQA k/v ring, MLA latent (B,S,576), Mamba conv+state.
 
 ``serve_step`` is what the dry-run lowers for decode_* shapes: one new
@@ -29,8 +38,30 @@ class DecodeState:
     last_token: jax.Array         # (B,) int32
 
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16) -> DecodeState:
+def make_serving_plan(cfg: ModelConfig, max_len: int, *,
+                      interpret: bool = False):
+    """The ServingPlan for ``cfg`` (None when the config is not
+    lowerable — MLA/SSM; serving then keeps config-driven dispatch).
+    Resolved here so serve callers never touch jax backend strings."""
+    from repro.lower import serving_plan
+    return serving_plan(cfg, max_len, backend=jax.default_backend(),
+                        interpret=interpret)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int,
+                      max_len: Optional[int] = None,
+                      dtype=jnp.bfloat16, *, plan=None) -> DecodeState:
+    """Allocate the cache state.  ``max_len`` may come from the plan
+    (``plan.max_len``) so the cache geometry and the plan's context
+    buckets are sized together."""
+    if max_len is None:
+        if plan is None:
+            raise TypeError("init_decode_state: pass max_len or a plan")
+        max_len = plan.max_len
+    if plan is not None and max_len > plan.max_len:
+        raise ValueError(
+            f"cache max_len {max_len} exceeds the plan's {plan.max_len}: "
+            "contexts past the last plan bucket would be unplanned")
     return DecodeState(
         cache=tf.init_model_cache(cfg, batch, max_len, dtype),
         cache_len=jnp.zeros((), jnp.int32),
@@ -43,11 +74,19 @@ def greedy_sample(logits) -> jax.Array:
 
 
 def prefill(params, cfg: ModelConfig, tokens, state: DecodeState, *,
-            embeds=None, interpret: bool = False) -> DecodeState:
-    """Run the prompt through the model, filling the caches."""
+            embeds=None, plan=None,
+            interpret: bool = False) -> DecodeState:
+    """Run the prompt through the model, filling the caches.  With a
+    ``ServingPlan``, the prompt-length prefill ExecutionPlan routes
+    every block's attention kernel."""
+    dispatch = None
+    if plan is not None:
+        rows = (tokens.shape[1] if tokens is not None else 0) + \
+            (embeds.shape[1] if embeds is not None else 0)
+        dispatch = plan.prefill_dispatch(rows)
     logits, new_cache = tf.forward(
         params, cfg, tokens=tokens, embeds=embeds, cache=state.cache,
-        cache_len=0, interpret=interpret)
+        cache_len=0, interpret=interpret, plan=dispatch)
     s = logits.shape[1]
     return DecodeState(cache=new_cache,
                        cache_len=jnp.asarray(s, jnp.int32),
@@ -55,19 +94,31 @@ def prefill(params, cfg: ModelConfig, tokens, state: DecodeState, *,
 
 
 def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
-                interpret: bool = False) -> tuple[DecodeState, jax.Array]:
-    """One token for every row (M=1: the paper's M<N schedule regime)."""
+                plan=None, interpret: bool = False
+                ) -> tuple[DecodeState, jax.Array]:
+    """One token for every row (M=1: the paper's M<N schedule regime).
+
+    With a ``ServingPlan`` the step re-resolves its ExecutionPlan for
+    the context the scores will span (cache prefix + the new token) —
+    the kernel path switches the step the context crosses
+    ``plan.crossover_ctx`` (= 2N, the analytical alpha_kv crossover).
+    """
+    dispatch = None
+    if plan is not None:
+        ctx = plan.concrete_ctx(state.cache_len) + 1
+        dispatch = plan.decode_dispatch(ctx)
     logits, new_cache = tf.forward(
         params, cfg, tokens=state.last_token[:, None],
         cache=state.cache, cache_len=state.cache_len,
-        interpret=interpret)
+        interpret=interpret, plan=dispatch)
     nxt = greedy_sample(logits)
     return DecodeState(cache=new_cache, cache_len=state.cache_len + 1,
                        last_token=nxt), logits[:, -1]
 
 
 def serve_step(params, cfg: ModelConfig, state: DecodeState, *,
-               interpret: bool = False) -> DecodeState:
+               plan=None, interpret: bool = False) -> DecodeState:
     """The dry-run entry point: decode_step without returning logits."""
-    new_state, _ = decode_step(params, cfg, state, interpret=interpret)
+    new_state, _ = decode_step(params, cfg, state, plan=plan,
+                               interpret=interpret)
     return new_state

@@ -10,10 +10,12 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 from repro.core import analytical, fusion, scheduler, spacegen, workload
+from repro.lower import cache as lower_cache
 
 #: Modules whose ``>>>`` examples are part of the documented API
 #: (mirrors the `docs` CI job's ``python -m doctest`` invocation).
-DOCTEST_MODULES = (workload, spacegen, fusion, scheduler, analytical)
+DOCTEST_MODULES = (workload, spacegen, fusion, scheduler, analytical,
+                   lower_cache)
 
 
 def test_docstring_examples_run():

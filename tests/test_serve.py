@@ -47,6 +47,86 @@ def test_batcher_eos_terminates():
     assert b.finished[0].generated == [7]
 
 
+def test_batcher_eos_on_final_slot():
+    """EOS landing on the *last* slot index frees it and the next
+    queued request takes exactly that slot."""
+    b = RequestBatcher(batch_size=3, eos_id=7)
+    for uid in range(4):
+        b.submit(Request(uid=uid, prompt=[1], max_new_tokens=5))
+    prefills = []
+    step = {"n": 0}
+
+    def decode_fn():
+        step["n"] += 1
+        # step 1: EOS only on slot 2 (the final slot)
+        return np.array([0, 0, 7]) if step["n"] == 1 \
+            else np.array([7, 7, 7])
+
+    b.run(lambda s, p: prefills.append(tuple(s)), decode_fn,
+          max_steps=10)
+    assert prefills[0] == (0, 1, 2)
+    assert prefills[1] == (2,), "freed final slot must be refilled"
+    assert len(b.finished) == 4
+    assert b.finished[0].uid == 2       # the EOS'd final-slot request
+
+
+def test_batcher_submit_after_run_started():
+    """A request submitted mid-run (from inside the decode loop) is
+    picked up by a later _fill_slots and completes."""
+    b = RequestBatcher(batch_size=1, eos_id=9)
+    b.submit(Request(uid=0, prompt=[1], max_new_tokens=2))
+    late = Request(uid=1, prompt=[2], max_new_tokens=1)
+    injected = {"done": False}
+
+    def decode_fn():
+        if not injected["done"]:
+            injected["done"] = True
+            b.submit(late)              # arrives while run() is live
+        return np.array([3])
+
+    done = b.run(lambda s, p: None, decode_fn, max_steps=10)
+    assert {r.uid for r in done} == {0, 1}
+    assert late.generated == [3]
+
+
+def test_batcher_request_longer_than_max_len():
+    """max_len guards the cache geometry: an unservable prompt is
+    rejected at submit; a servable one has its generation budget
+    clamped so prompt + generated never overruns the cache."""
+    b = RequestBatcher(batch_size=1, eos_id=-1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        b.submit(Request(uid=0, prompt=list(range(8))))
+    ok = Request(uid=1, prompt=list(range(5)), max_new_tokens=100)
+    b.submit(ok)
+    assert ok.max_new_tokens == 3       # clamped to the cache headroom
+    done = b.run(lambda s, p: None, lambda: np.array([1]), max_steps=10)
+    assert len(done[0].generated) == 3
+    assert len(done[0].prompt) + len(done[0].generated) <= 8
+
+
+def test_batcher_plan_aware_run_switches_kernel_path():
+    """With a ServingPlan, run() hands decode_fn the PlanDispatch for
+    the batch's deepest context — and the dispatched kernel path
+    switches when that context crosses the alpha_kv crossover."""
+    from repro import lower
+    cfg = configs.get_config("qwen3-8b", smoke=True)   # N=32, 2N=64
+    plan = lower.serving_plan(cfg, max_len=96)
+    b = RequestBatcher(batch_size=2, eos_id=-1, max_len=96)
+    b.submit(Request(uid=0, prompt=list(range(60)), max_new_tokens=8))
+    b.submit(Request(uid=1, prompt=list(range(3)), max_new_tokens=8))
+    paths = []
+
+    def decode_fn(dispatch):
+        paths.append(dispatch.path)
+        return np.array([1, 1])
+
+    b.run(lambda s, p: None, decode_fn, max_steps=10, plan=plan)
+    # contexts 61..68 cross 2N = 64: unfused first, fused after
+    assert paths[:3] == [lower.UNFUSED] * 3
+    assert set(paths[4:]) == {lower.FUSED_ATTENTION}
+    assert [r[1] for r in plan.resolutions] == list(range(61, 69))
+
+
 def test_greedy_decode_matches_forward_argmax():
     """Three decode steps reproduce the argmax chain of full forwards."""
     cfg = configs.get_config("qwen3-8b", smoke=True)

@@ -1,0 +1,252 @@
+"""Measured-vs-predicted validation of the DSE cost model through the
+lowering subsystem (the paper's Sec. III methodology — Stream
+predictions vs measured GAP8 runs — re-run against this repo's own
+jax_pallas runtime).
+
+For each (config, phase, shape) cell the harness:
+
+1. lowers the candidate schedules — the DSE-chosen one plus forced
+   counterfactuals (LBL, score-fusion, full fusion) — into
+   ExecutionPlans (``repro.lower``),
+2. *predicts* each plan with the analytical engine
+   (``ExecutionPlan.predict`` -> cycles, peak words),
+3. *executes* each plan's kernel path on real arrays (Pallas interpret
+   mode on CI / CPU; native kernels on TPU) and wall-clocks it,
+4. emits a paper-style validation table plus per-cell schedule-ranking
+   agreement (is the predicted-faster schedule measured-faster?) and
+   per-schedule shape-scaling agreement (do predicted and measured
+   grow together?).
+
+Downgrades recorded on the plans (masked-lengths fallback, Q-fusion
+legality) are printed with the table, so a measured number is never
+attributed to a path that did not run.
+
+Predicted cycles cover the full lowered block (attention + FFN; the
+FFN term is identical across candidate schedules of one cell, so
+schedule ranking is attention-driven); measured wall-clock isolates
+the attention pipeline x -> (Q) -> scores -> out that the schedules
+differ on.
+
+    PYTHONPATH=src python tools/validate_costmodel.py
+    PYTHONPATH=src python tools/validate_costmodel.py \
+        --arch qwen3-8b --backend interpret --prefill-seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro import lower
+from repro.kernels import ops
+
+#: (schedule label, fuse_q, fuse_scores) counterfactual grid per phase.
+#: None, None = let the phase decision rule pick (the DSE choice).
+CANDIDATES = {
+    "prefill": [("dse", None, None), ("lbl", False, False),
+                ("fuse_pv", False, True), ("fuse_all", True, True)],
+    "decode": [("dse", None, None), ("lbl", False, False),
+               ("fuse_scores", False, True), ("fuse_all", True, True)],
+}
+
+
+def _dims(cfg):
+    return (cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.d_model)
+
+
+def _inputs(cfg, phase: str, n: int, key=None):
+    """(x, wq, k, v, q_offset): the attention pipeline's inputs for one
+    cell — M rows of new input vs an n-deep (self or cached) score
+    width.  No RoPE/qk-norm, so every candidate path (including
+    Q-projection fusion) is legal and the race is schedules-only."""
+    hq, hkv, d, e = _dims(cfg)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    m = 1 if phase == "decode" else n
+    x = jax.random.normal(ks[0], (1, m, e), jnp.float32)
+    wq = jax.random.normal(ks[1], (e, hq, d), jnp.float32) / e ** 0.5
+    k = jax.random.normal(ks[2], (1, hkv, n, d), jnp.float32)
+    v = jax.random.normal(ks[3], (1, hkv, n, d), jnp.float32)
+    return x, wq, k, v, n - m
+
+
+def _candidate_fn(dispatch, causal: bool, q_offset: int):
+    """One jit-able x,wq,k,v -> out pipeline taking the dispatch's
+    kernel path (projection included, so every candidate does the same
+    end-to-end math)."""
+    if dispatch.path == lower.QPROJ_ATTENTION:
+        def f(x, wq, k, v):
+            return ops.qproj_attention(
+                x, wq, k, v, causal=causal, q_offset=q_offset,
+                plan=dispatch, interpret=dispatch.interpret)
+    else:
+        def f(x, wq, k, v):
+            q = jnp.einsum("bse,ehd->bhsd", x, wq)
+            return ops.attention(
+                q, k, v, causal=causal, q_offset=q_offset,
+                plan=dispatch, interpret=dispatch.interpret)
+    return f
+
+
+def _measure_us(fn, args, repeats: int) -> float:
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))          # compile + warm
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _concordance(pairs) -> tuple[float, int]:
+    """Fraction of candidate pairs whose predicted order matches the
+    measured order; predicted near-ties (<1% apart) are skipped —
+    the paper searches fused schedules at the *same* latency, so exact
+    ties carry no ranking information."""
+    agree = total = 0
+    for i in range(len(pairs)):
+        for j in range(i + 1, len(pairs)):
+            (p1, m1), (p2, m2) = pairs[i], pairs[j]
+            if abs(p1 - p2) <= 0.01 * max(p1, p2):
+                continue
+            total += 1
+            if (p1 < p2) == (m1 < m2):
+                agree += 1
+    return (agree / total if total else 1.0), total
+
+
+def validate(archs=("qwen3-8b", "starcoder2-7b"), *, smoke: bool = True,
+             backend: str = "auto", prefill_seqs=(128, 512),
+             decode_ctxs=(48, 512), repeats: int = 3) -> list:
+    """Run the harness; returns the table as a list of dict rows
+    (kind = "run" per executed plan, "ranking" per cell summary,
+    "scaling" per schedule-across-shapes summary)."""
+    if backend == "auto":
+        backend = "native" if jax.default_backend() == "tpu" \
+            else "interpret"
+    interpret = backend == "interpret"
+    jax_backend = jax.default_backend() if backend == "native" else \
+        ("tpu" if interpret else "cpu")
+    rows: list = []
+    for arch in archs:
+        cfg = configs.get_config(arch, smoke=smoke)
+        if not lower.supported(cfg):
+            rows.append({"name": f"skip_{arch}", "kind": "skip",
+                         "reason": "not lowerable (MLA/SSM)"})
+            continue
+        for phase, shapes in (("prefill", prefill_seqs),
+                              ("decode", decode_ctxs)):
+            by_schedule: dict = {}
+            for n in shapes:
+                cell: list = []
+                for label, fq, fs in CANDIDATES[phase]:
+                    plan = lower.lower(cfg, phase, n, fuse_q=fq,
+                                       fuse_scores=fs, bucket=n)
+                    d = lower.dispatch(
+                        plan, backend=jax_backend, interpret=interpret,
+                        entry="qproj_attention"
+                        if plan.kernel_path == lower.QPROJ_ATTENTION
+                        else "attention")
+                    x, wq, k, v, q_off = _inputs(cfg, phase, n)
+                    fn = _candidate_fn(d, causal=True, q_offset=q_off)
+                    us = _measure_us(fn, (x, wq, k, v), repeats)
+                    pred = plan.predict()
+                    row = {
+                        "name": f"{arch}_{phase}{n}_{label}",
+                        "kind": "run", "arch": arch, "phase": phase,
+                        "n": n, "schedule": label,
+                        "policy": plan.block(0).policy,
+                        "path": d.path, "impl": d.impl,
+                        "predicted_cycles": round(pred.latency_cycles),
+                        "predicted_peak_words": pred.peak_active_words,
+                        "measured_us": round(us, 1),
+                        "downgrades": [f"{g.from_path}->{g.to_path}: "
+                                       f"{g.reason}"
+                                       for g in plan.downgrades],
+                    }
+                    rows.append(row)
+                    cell.append(row)
+                    by_schedule.setdefault(label, []).append(row)
+                frac, pairs = _concordance(
+                    [(r["predicted_cycles"], r["measured_us"])
+                     for r in cell])
+                rows.append({
+                    "name": f"{arch}_{phase}{n}_ranking",
+                    "kind": "ranking", "arch": arch, "phase": phase,
+                    "n": n, "rank_agreement": round(frac, 3),
+                    "pairs": pairs})
+            for label, runs in by_schedule.items():
+                if len(runs) < 2:
+                    continue
+                frac, pairs = _concordance(
+                    [(r["predicted_cycles"], r["measured_us"])
+                     for r in runs])
+                rows.append({
+                    "name": f"{arch}_{phase}_{label}_scaling",
+                    "kind": "scaling", "arch": arch, "phase": phase,
+                    "schedule": label,
+                    "rank_agreement": round(frac, 3), "pairs": pairs})
+    return rows
+
+
+def _print_table(rows) -> None:
+    runs = [r for r in rows if r["kind"] == "run"]
+    if runs:
+        hdr = (f"{'cell':34} {'schedule':12} {'path':16} {'impl':10} "
+               f"{'pred Mcycles':>12} {'pred peak':>10} {'meas us':>10}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in runs:
+            print(f"{r['arch'] + ' ' + r['phase'] + str(r['n']):34} "
+                  f"{r['schedule']:12} {r['path']:16} {r['impl']:10} "
+                  f"{r['predicted_cycles'] / 1e6:12.4f} "
+                  f"{r['predicted_peak_words']:10d} "
+                  f"{r['measured_us']:10.1f}")
+            for g in r["downgrades"]:
+                print(f"{'':34} ! {g}")
+        print()
+    for kind, title in (("ranking", "schedule-ranking agreement "
+                         "(predicted-faster is measured-faster)"),
+                        ("scaling", "shape-scaling agreement")):
+        sel = [r for r in rows if r["kind"] == kind]
+        if sel:
+            print(title + ":")
+            for r in sel:
+                who = r.get("schedule", f"{r.get('n', '')}")
+                print(f"  {r['arch']:16} {r['phase']:8} {who!s:12} "
+                      f"agreement={r['rank_agreement']:.3f} "
+                      f"over {r['pairs']} pairs")
+            print()
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", action="append",
+                   help="architecture(s) to validate (repeatable; "
+                        "default qwen3-8b + starcoder2-7b)")
+    p.add_argument("--full", action="store_true",
+                   help="published dims instead of smoke configs")
+    p.add_argument("--backend", default="auto",
+                   choices=("auto", "interpret", "native"),
+                   help="interpret = Pallas interpreter (CI/CPU); "
+                        "native = compiled kernels (TPU)")
+    p.add_argument("--prefill-seq", type=int, action="append")
+    p.add_argument("--decode-ctx", type=int, action="append")
+    p.add_argument("--repeats", type=int, default=3)
+    a = p.parse_args(argv)
+    rows = validate(
+        tuple(a.arch) if a.arch else ("qwen3-8b", "starcoder2-7b"),
+        smoke=not a.full, backend=a.backend,
+        prefill_seqs=tuple(a.prefill_seq or (128, 512)),
+        decode_ctxs=tuple(a.decode_ctx or (48, 512)),
+        repeats=a.repeats)
+    _print_table(rows)
+
+
+if __name__ == "__main__":
+    main()
