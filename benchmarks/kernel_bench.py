@@ -1,15 +1,21 @@
 """Runtime fused-schedule benchmark: layer-fused vs layer-by-layer
 attention — wall time (CPU lax paths; the Pallas kernels target TPU)
 and the derived HBM-traffic gain on the TPU model (the runtime
-re-expression of the paper's alpha)."""
+re-expression of the paper's alpha) — plus the masked-decode shapes:
+the scalar-prefetch masked kernel over a padded KV cache, short vs
+full ``lengths``, showing decode cost proportional to the *actual*
+context (KV blocks wholly past ``lengths[b]`` are skipped) and zero
+lengths downgrades on the Pallas path."""
 
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import lower
 from repro.core import codesign
 from repro.kernels import ops
+from repro.kernels.fused_attention import fused_attention_masked
 
 
 def _time(fn, *args, iters=3):
@@ -19,6 +25,56 @@ def _time(fn, *args, iters=3):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _masked_decode_rows() -> list:
+    """Masked-decode shapes (the serving regime): one query row vs a
+    padded KV cache.  Interpret-mode wall time over short vs full
+    lengths shows the block-skip win (work tracks the actual context,
+    not the cache depth); the dispatched plan's ledger shows zero
+    lengths downgrades on the Pallas path."""
+    key = jax.random.PRNGKey(3)
+    b, hq, hkv, d, skv, bk = 2, 4, 2, 64, 1024, 128
+    q = jax.random.normal(key, (b, hq, 1, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, hkv, skv, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (b, hkv, skv, d), jnp.float32)
+
+    jfn = jax.jit(lambda lens: fused_attention_masked(
+        q, k, v, lens, causal=False, block_q=128, block_k=bk,
+        interpret=True))
+
+    def timed(lens, iters=3):
+        jax.block_until_ready(jfn(lens))          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(jfn(lens))
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    short, full = bk, skv                    # 1 vs 8 live KV blocks
+    us_short = timed(jnp.full((b,), short, jnp.int32))
+    us_full = timed(jnp.full((b,), full, jnp.int32))
+
+    # the planned Pallas path executes: zero lengths downgrades
+    lower.clear_plan_cache()
+    plan = lower.kernel_plan(seq_q=1, seq_kv=skv, d_head=d,
+                             n_heads=hq, n_kv_heads=hkv)
+    disp = lower.dispatch(plan, backend=jax.default_backend(),
+                          interpret=True, lengths_masked=True)
+    ops.attention(q, k, v, causal=False,
+                  lengths=jnp.full((b,), short, jnp.int32),
+                  plan=disp, interpret=True)
+    lengths_downgrades = sum(
+        g.count for g in plan.downgrades if "masked-lengths" in g.reason)
+    return [{
+        "name": f"kernel_masked_decode_1x{skv}",
+        "path": disp.path, "impl": disp.impl,
+        "us_len_{}".format(short): round(us_short, 1),
+        "us_len_{}".format(full): round(us_full, 1),
+        "short_over_full": round(us_short / us_full, 3),
+        "lengths_downgrades": lengths_downgrades,
+    }]
 
 
 def run() -> list:
@@ -44,6 +100,7 @@ def run() -> list:
             "hbm_gain_tpu_model": round(
                 codesign.fused_traffic_gain(skv, d), 4),
         })
+    rows.extend(_masked_decode_rows())
     return rows
 
 

@@ -12,7 +12,11 @@ plan-aware ``serve`` stack, and report
   the analytical engine's predicted cycles for the same lowered
   schedule,
 * LRU plan-cache hit statistics over the decode loop (one resolution
-  per context *bucket*, not per step).
+  per context *bucket*, not per step),
+* the PR-5 acceptance row: a served decode run in **interpret mode**
+  (the Pallas interpreter really executes the masked scalar-prefetch
+  kernel) crossing the crossover, with **zero lengths downgrades** —
+  the ExecutionPlan's resolved kernel path is the path that executes.
 """
 
 import time
@@ -89,11 +93,52 @@ def _arch_rows(arch: str) -> list:
     return rows
 
 
+def _masked_serve_rows(arch: str = "qwen3-8b") -> list:
+    """Served decode in Pallas interpret mode: the planned path (which
+    switches unfused -> fused at C = 2N) is the executed path — the
+    masked kernels make every fused KV-cached step legal Pallas, so
+    the lengths-downgrade count must be zero."""
+    cfg = configs.get_config(arch, smoke=True)
+    n = cfg.head_dim
+    prompt_len, steps = 2 * n - 2, 4       # crosses C = 2N mid-run
+    plan = make_serving_plan(cfg, max_len=4 * n, interpret=True)
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, prompt_len),
+                                0, cfg.vocab_size)
+    state = init_decode_state(cfg, 1, None, jnp.float32, plan=plan)
+    state = prefill(params, cfg, prompt, state, plan=plan,
+                    interpret=True)
+    for _ in range(steps):
+        state, _ = decode_step(params, cfg, state, plan=plan,
+                               interpret=True)
+    decode_res = [r for r in plan.resolutions if r[0] == "decode"]
+    plans = {id(p): p for p in
+             (lower.resolve_plan(cfg, "decode", ctx,
+                                 n_blocks=cfg.n_layers)
+              for (_, ctx, _, _, _) in decode_res)}
+    lengths_downgrades = sum(
+        g.count for p in plans.values() for g in p.downgrades
+        if "masked-lengths" in g.reason)
+    return [{
+        "name": f"lowering_masked_serve_{arch}",
+        "backend": "interpret",
+        "paths": [r[3] for r in decode_res],
+        "impls": [r[4] for r in decode_res],
+        "switched_at_crossover":
+            len({r[3] for r in decode_res}) > 1,
+        "fused_steps_ran_pallas": all(
+            r[4] == "pallas" for r in decode_res
+            if r[3] != lower.UNFUSED),
+        "lengths_downgrades": lengths_downgrades,
+    }]
+
+
 def run() -> list:
     lower.clear_plan_cache()
     rows = []
     for arch in ARCHS:
         rows.extend(_arch_rows(arch))
+    rows.extend(_masked_serve_rows())
     return rows
 
 

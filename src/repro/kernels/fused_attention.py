@@ -49,6 +49,48 @@ def _causal_mask(bq: int, bk: int, qi, kj, q_offset: int):
     return cols <= rows
 
 
+def _init_softmax_state(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _online_softmax_tile(s, mask, v_tile, acc_ref, m_ref, l_ref):
+    """One online-softmax update over a masked (bq, bk) score tile:
+    rescale the running (acc, m, l) state and fold in ``p @ v``.
+
+    ``mask`` zeroes p where set-to-NEG_INF alone is not enough: a row
+    with NO valid column yet has m_new still at NEG_INF, so
+    exp(s - m_new) = 1, not 0 (only the masked kernels need it; the
+    unmasked kernels pass None — causal rows always see their diagonal
+    first, and a later valid tile rescales any garbage away)."""
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                    # (bq, bk)
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v_tile.dtype), v_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (bq, d)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+
+def _emit_softmax_out(o_ref, lse_ref, acc_ref, m_ref, l_ref):
+    """Normalise the accumulator into o (and lse when wanted); rows
+    that never saw a valid column (l == 0) emit zeros."""
+    l = l_ref[:, :1]
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+    if lse_ref is not None:
+        lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -64,9 +106,7 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
     @pl.when(kj == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        _init_softmax_state(acc_ref, m_ref, l_ref)
 
     # causal block skip: block fully masked iff first row < first col
     run = True
@@ -88,26 +128,11 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
             cols = kj * bk + jax.lax.broadcasted_iota(
                 jnp.int32, (bq, bk), 1)
             s = jnp.where(cols < kv_len, s, NEG_INF)
-        m_prev = m_ref[:, :1]                                 # (bq, 1)
-        l_prev = l_ref[:, :1]
-        m_cur = jnp.max(s, axis=1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)                                # (bq, bk) f32
-        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-        pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)               # (bq, d)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        _online_softmax_tile(s, None, v_ref[0], acc_ref, m_ref, l_ref)
 
     @pl.when(kj == nk - 1)
     def _emit():
-        l = l_ref[:, :1]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
-        lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+        _emit_softmax_out(o_ref, lse_ref, acc_ref, m_ref, l_ref)
 
 
 def _fwd(q, k, v, *, causal, scale, q_offset, block_q, block_k, interpret):
@@ -154,6 +179,143 @@ def _fwd(q, k, v, *, causal, scale, q_offset, block_q, block_k, interpret):
     o = o[:, :sq].reshape(b, hq, sq, dv)
     lse = lse[:, :sq].reshape(b, hq, sq)
     return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Masked-lengths forward (KV-cached serving)
+# ---------------------------------------------------------------------------
+
+def _masked_run(length, qi, kj, bq: int, bk: int, sq: int, causal: bool):
+    """The block-skip predicate — the perf win: KV blocks wholly past
+    this row's valid prefix are never computed, so decode cost is
+    proportional to the *actual* context, not the padded cache depth.
+    Under causal the bound also drops blocks past the last row's
+    end-of-prefix anchor."""
+    run = kj * bk < length
+    if causal:
+        # rows anchored at the END of the valid prefix (decode/chunked
+        # prefill): global row r attends cols <= length - sq + r
+        run = jnp.logical_and(
+            run, (length - sq + (qi + 1) * bq - 1) >= kj * bk)
+    return run
+
+
+def _masked_tile_mask(length, qi, kj, bq: int, bk: int, sq: int,
+                      causal: bool):
+    """The (bq, bk) validity mask of one score tile: cols < length[b],
+    intersected with the end-anchored causal triangle."""
+    cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = cols < length
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        mask = jnp.logical_and(mask, cols <= length - sq + rows)
+    return mask
+
+
+def _masked_kv_index(h, i, j, lens, *, hq: int, hkv: int, bk: int):
+    """KV block index for the masked kernels (grid dim 0 is b*hq):
+    skipped iterations (blocks wholly past lengths[b]) are clamped to
+    the last valid block, so they re-address an already-fetched block
+    instead of issuing fresh HBM DMA — the scalar-prefetch half of the
+    block-skip optimisation."""
+    b = h // hq
+    last = jnp.maximum((lens[b] + bk - 1) // bk - 1, 0)
+    return (b * hkv + (h % hq) // (hq // hkv), jnp.minimum(j, last), 0)
+
+
+def _masked_fwd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc_ref, m_ref, l_ref, *,
+                       causal: bool, scale: float, hq: int, sq: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+    bq = q_ref.shape[1]
+    bk = k_ref.shape[1]
+    length = len_ref[pl.program_id(0) // hq]    # this row's valid prefix
+
+    @pl.when(kj == 0)
+    def _init():
+        _init_softmax_state(acc_ref, m_ref, l_ref)
+
+    @pl.when(_masked_run(length, qi, kj, bq, bk, sq, causal))
+    def _body():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq, bk)
+        mask = _masked_tile_mask(length, qi, kj, bq, bk, sq, causal)
+        s = jnp.where(mask, s, NEG_INF)
+        _online_softmax_tile(s, mask, v_ref[0], acc_ref, m_ref, l_ref)
+
+    @pl.when(kj == nk - 1)
+    def _emit():
+        _emit_softmax_out(o_ref, None, acc_ref, m_ref, l_ref)
+
+
+def fused_attention_masked(q, k, v, lengths, *, causal: bool = True,
+                           scale=None, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False):
+    """Masked-``lengths`` layer-fused attention forward (the serving
+    path: decode / chunked prefill over a partially-filled KV cache).
+
+    ``lengths``: (B,) int32 valid KV prefix per batch row, scalar-
+    prefetched into SMEM.  Score tiles are masked with
+    ``cols < lengths[b]`` and — the perf win — KV blocks wholly past
+    ``lengths[b]`` are skipped (``pl.when(kj * bk < length)`` plus a
+    clamped index map), so the sequential KV grid a row pays for is
+    bounded by its *actual* context, not the padded cache depth: the
+    paper's input-size-adaptive schedule realised on-chip.
+
+    Causal semantics anchor the Sq query rows at the END of the valid
+    prefix: row r attends cols <= lengths[b] - Sq + r (equivalent to
+    ``q_offset = lengths - Sq``, per batch row).  Rows with
+    ``lengths[b] = 0`` (or no valid causal column) emit zeros.
+
+    Forward-only: serving never differentiates; training uses
+    :func:`fused_attention` (full sequences carry no lengths mask).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, dv = v.shape
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, _round_up(sq))
+    bk = min(block_k, _round_up(skv))
+    sq_p, skv_p = _pad_to(sq, bq), _pad_to(skv, bk)
+    qr = _pad_seq(q.reshape(b * hq, sq, d), sq_p)
+    kr = _pad_seq(k.reshape(b * hkv, skv, d), skv_p)
+    vr = _pad_seq(v.reshape(b * hkv, skv, dv), skv_p)
+    nq, nk = sq_p // bq, skv_p // bk
+    lens = jnp.minimum(lengths.astype(jnp.int32), skv)
+
+    kv_index = functools.partial(_masked_kv_index, hq=hq, hkv=hkv,
+                                 bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j, lens: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv),
+                               lambda h, i, j, lens: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        functools.partial(_masked_fwd_kernel, causal=causal, scale=scale,
+                          hq=hq, sq=sq),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return o[:, :sq].reshape(b, hq, sq, dv)
 
 
 # ---------------------------------------------------------------------------

@@ -46,9 +46,7 @@ def _qproj_fwd_kernel(x_ref, wq_ref, k_ref, v_ref, o_ref, lse_ref,
         q_scr[...] = jax.lax.dot_general(
             x_ref[0], wq_ref[0], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        fa._init_softmax_state(acc_ref, m_ref, l_ref)
 
     run = True
     if causal:
@@ -68,26 +66,12 @@ def _qproj_fwd_kernel(x_ref, wq_ref, k_ref, v_ref, o_ref, lse_ref,
             cols = kj * bk + jax.lax.broadcasted_iota(
                 jnp.int32, (bq, bk), 1)
             s = jnp.where(cols < kv_len, s, NEG_INF)
-        m_prev = m_ref[:, :1]
-        l_prev = l_ref[:, :1]
-        m_cur = jnp.max(s, axis=1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-        pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        fa._online_softmax_tile(s, None, v_ref[0], acc_ref, m_ref,
+                                l_ref)
 
     @pl.when(kj == nk - 1)
     def _emit():
-        l = l_ref[:, :1]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
-        lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+        fa._emit_softmax_out(o_ref, lse_ref, acc_ref, m_ref, l_ref)
 
 
 def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
@@ -146,6 +130,105 @@ def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
     o = o[:, :sq].reshape(b, hq, sq, dv)
     lse = lse[:, :sq].reshape(b, hq, sq)
     return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Masked-lengths forward (KV-cached serving)
+# ---------------------------------------------------------------------------
+
+def _qproj_masked_fwd_kernel(len_ref, x_ref, wq_ref, k_ref, v_ref, o_ref,
+                             q_scr, acc_ref, m_ref, l_ref, *,
+                             causal: bool, scale: float, hq: int, sq: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+    bq = x_ref.shape[1]
+    bk = k_ref.shape[1]
+    length = len_ref[pl.program_id(0) // hq]
+
+    @pl.when(kj == 0)
+    def _init():
+        # the fusion: Q tile built in VMEM, never written to HBM
+        q_scr[...] = jax.lax.dot_general(
+            x_ref[0], wq_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        fa._init_softmax_state(acc_ref, m_ref, l_ref)
+
+    @pl.when(fa._masked_run(length, qi, kj, bq, bk, sq, causal))
+    def _body():
+        q = q_scr[...].astype(k_ref.dtype)
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mask = fa._masked_tile_mask(length, qi, kj, bq, bk, sq, causal)
+        s = jnp.where(mask, s, NEG_INF)
+        fa._online_softmax_tile(s, mask, v_ref[0], acc_ref, m_ref,
+                                l_ref)
+
+    @pl.when(kj == nk - 1)
+    def _emit():
+        fa._emit_softmax_out(o_ref, None, acc_ref, m_ref, l_ref)
+
+
+def fused_qproj_attention_masked(x, wq, k, v, lengths, *,
+                                 causal: bool = True, scale=None,
+                                 block_q: int = 256, block_k: int = 512,
+                                 interpret: bool = False):
+    """Masked-``lengths`` Fig. 5b forward: Q = x @ Wq fused into the
+    score kernel AND per-batch-row valid KV prefixes masked in-kernel
+    (scalar-prefetched SMEM lengths; KV blocks wholly past
+    ``lengths[b]`` skipped).  Causal rows anchor at the end of the
+    valid prefix, as in :func:`fused_attention_masked`.  Forward-only —
+    the KV-cached serving path never differentiates."""
+    b, sq, e = x.shape
+    eh, hq, d = wq.shape
+    assert eh == e
+    _, hkv, skv, dv = v.shape
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, fa._round_up(sq))
+    bk = min(block_k, fa._round_up(skv))
+    sq_p, skv_p = fa._pad_to(sq, bq), fa._pad_to(skv, bk)
+    nq, nk = sq_p // bq, skv_p // bk
+    xr = fa._pad_seq(x, sq_p, axis=1)
+    wqr = jnp.moveaxis(wq, 1, 0)                     # (Hq, E, D)
+    kr = fa._pad_seq(k.reshape(b * hkv, skv, d), skv_p)
+    vr = fa._pad_seq(v.reshape(b * hkv, skv, dv), skv_p)
+    lens = jnp.minimum(lengths.astype(jnp.int32), skv)
+
+    kv_index = functools.partial(fa._masked_kv_index, hq=hq, hkv=hkv,
+                                 bk=bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, e),
+                         lambda h, i, j, lens_: (h // hq, i, 0)),
+            pl.BlockSpec((1, e, d),
+                         lambda h, i, j, lens_: (h % hq, 0, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv),
+                               lambda h, i, j, lens_: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        functools.partial(_qproj_masked_fwd_kernel, causal=causal,
+                          scale=scale, hq=hq, sq=sq),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dv), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, xr, wqr, kr, vr)
+    return o[:, :sq].reshape(b, hq, sq, dv)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))

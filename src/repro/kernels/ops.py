@@ -21,10 +21,16 @@ plan-resolved tiling (``codesign.plan_tiling``) drive the dispatch —
 the DSE engine's decision, not an ad-hoc backend check.  The serving
 stack passes its own ``plan`` (a ``lower.runtime.PlanDispatch``)
 instead, so whole-network phase decisions reach every block's kernel
-call.  Runtime deviations from the planned path (e.g. the
-masked-``lengths`` Pallas variant is not implemented) warn once and
-are recorded on the plan, so measured-vs-predicted tables never
-mislabel the executed path.
+call.
+
+A ``lengths`` mask (KV-cached decode / chunked prefill) stays on the
+Pallas path: the masked scalar-prefetch kernels
+(``fused_attention_masked`` / ``fused_qproj_attention_masked``) mask
+score tiles in-kernel and skip KV blocks wholly past each row's valid
+prefix.  Only genuinely unsupported calls (non-float dtypes,
+malformed lengths) warn once and fall back to the chunked-XLA path,
+with the concrete reason recorded on the plan's downgrade ledger so
+measured-vs-predicted tables never mislabel the executed path.
 """
 
 from __future__ import annotations
@@ -40,15 +46,20 @@ from repro.core.fusion import select_schedule
 from repro.kernels import ref as _ref
 from repro.kernels import xla_fallback as _xla
 from repro.kernels.fused_attention import fused_attention as _pallas_attn
+from repro.kernels.fused_attention import (
+    fused_attention_masked as _pallas_attn_masked)
 from repro.kernels.fused_qproj_attention import (
     fused_qproj_attention as _pallas_qproj_attn)
+from repro.kernels.fused_qproj_attention import (
+    fused_qproj_attention_masked as _pallas_qproj_attn_masked)
 from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
 from repro.kernels.xla_fallback import ssd_step  # re-export
 from repro.lower import cache as _plan_cache
 from repro.lower import runtime as _plan_rt
 
 __all__ = ["attention", "qproj_attention", "ssd", "ssd_step",
-           "schedule_for", "default_impl"]
+           "schedule_for", "default_impl",
+           "reset_lengths_downgrade_warning"]
 
 
 def default_impl() -> str:
@@ -89,28 +100,88 @@ def _auto_dispatch(entry: str, sq: int, skv: int, d: int, hq: int,
 _warned_lengths_downgrade = False
 
 
-def _downgrade_lengths(plan) -> str:
-    """pallas -> xla when a ``lengths`` mask is present: warn once
-    process-wide and record on the plan (if any) so validation tables
-    label the measured path truthfully."""
+def reset_lengths_downgrade_warning() -> None:
+    """Re-arm the process-wide warn-once flag of
+    :func:`_downgrade_lengths` (test isolation: the global must not
+    leak a 'already warned' state between tests)."""
+    global _warned_lengths_downgrade
+    _warned_lengths_downgrade = False
+
+
+def _downgrade_lengths(plan, reason: str) -> str:
+    """pallas -> xla when a ``lengths``-masked call cannot take the
+    masked Pallas kernel: warn once process-wide and record the
+    concrete *reason* on the plan (if any) so validation tables label
+    the measured path truthfully."""
     global _warned_lengths_downgrade
     if not _warned_lengths_downgrade:
         warnings.warn(
-            "attention: masked-lengths Pallas variant not implemented; "
-            "downgrading impl='pallas' to the chunked-XLA streaming "
-            "path (recorded on the ExecutionPlan; tracked §Perf)",
-            stacklevel=3)
+            "attention: masked-lengths call cannot take the masked "
+            f"Pallas kernel ({reason}); downgrading impl='pallas' to "
+            "the chunked-XLA streaming path (recorded on the "
+            "ExecutionPlan)", stacklevel=3)
         _warned_lengths_downgrade = True
     if plan is not None:
         plan.plan.record_downgrade(
-            "masked-lengths Pallas variant not implemented "
-            "(tracked §Perf)", plan.path, plan.path)
+            f"masked-lengths Pallas kernel unavailable: {reason}",
+            plan.path, plan.path)
     return "xla"
+
+
+_MASKED_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _masked_unsupported(x, lengths, causal: bool, q_offset,
+                        sq: int) -> Optional[str]:
+    """Reason string when the masked Pallas kernels cannot serve this
+    call, else None.  The masked kernels are forward-only and cover
+    the float dtypes the unmasked kernels do; anything else keeps the
+    (recorded) chunked-XLA fallback.
+
+    The masked kernels' causal anchor is the end of the valid prefix
+    (``q_offset = lengths - Sq``, per batch row).  An *explicit*
+    ``q_offset`` inconsistent with that anchor cannot be expressed, so
+    it is checked when both values are concrete and refused with a
+    recorded reason — never a silently different answer.  Abstract
+    (traced) values are trusted: the model runtime constructs
+    ``lengths = cache_len + Sq`` and ``q_offset = cache_len`` together.
+    """
+    if str(x.dtype) not in _MASKED_DTYPES:
+        return f"dtype {x.dtype} outside {_MASKED_DTYPES}"
+    if getattr(lengths, "ndim", 1) != 1:
+        return f"lengths must be (B,), got shape {lengths.shape}"
+    if not jnp.issubdtype(jnp.asarray(lengths).dtype, jnp.integer):
+        return f"lengths must be integral, got {lengths.dtype}"
+    if causal and q_offset is None and sq > 1:
+        # ambiguous anchor: the masked kernel would use lengths - Sq
+        # while the chunked fallback defaults to Skv - Sq — refuse
+        # rather than give backend-dependent answers (Sq = 1 is safe:
+        # the single row's limit is lengths - 1 under both)
+        return ("causal multi-row lengths call without q_offset: pass "
+                "q_offset = lengths - Sq (the masked kernel's anchor)")
+    if causal and q_offset is not None:
+        try:
+            # int() raises on traced values (then the serve invariant
+            # q_offset = lengths - Sq holds by construction); note
+            # jax.device_get would NOT raise — it passes tracers through
+            off = int(q_offset)
+            lens = [int(n) for n in lengths]
+        except (TypeError, jax.errors.ConcretizationTypeError,
+                jax.errors.TracerArrayConversionError,
+                jax.errors.TracerIntegerConversionError):
+            return None
+        if any(n - sq != off for n in lens):
+            return (f"explicit q_offset={off} inconsistent with the "
+                    f"masked kernel's causal anchor lengths - Sq "
+                    f"({[n - sq for n in lens]})")
+    return None
 
 
 def _resolve(entry: str, impl: str, plan, sq: int, skv: int, d: int,
              hq: int, hkv: int, lengths, block_q, block_k, interpret):
-    """Shared impl/tiling resolution for the attention entry points."""
+    """Shared impl/tiling resolution for the attention entry points.
+    Returns the (possibly auto-resolved) plan too, so the caller can
+    record lengths downgrades on it."""
     if plan is not None:
         if impl == "auto":
             impl = plan.impl
@@ -127,9 +198,7 @@ def _resolve(entry: str, impl: str, plan, sq: int, skv: int, d: int,
         else:
             impl = default_impl()
     block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
-    if lengths is not None and impl == "pallas":
-        impl = _downgrade_lengths(plan)
-    return impl, block_q, block_k, interpret
+    return impl, block_q, block_k, interpret, plan
 
 
 def attention(q, k, v, *, causal: bool = True,
@@ -145,17 +214,30 @@ def attention(q, k, v, *, causal: bool = True,
     M x M scores never materialised) or the plan's unfused reference.
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D[v]); GQA via Hq % Hkv == 0.
-    ``lengths``: (B,) valid kv prefix (decode w/ cache) — routed to the
-    lax path with a one-time warning + plan downgrade record (the
-    scalar-prefetch Pallas variant is a tracked §Perf item).
+    ``lengths``: (B,) valid kv prefix (decode / chunked prefill over a
+    KV cache) — served by the masked scalar-prefetch Pallas kernel on
+    the Pallas path (score tiles masked in-kernel, KV blocks wholly
+    past ``lengths[b]`` skipped); the masked kernel anchors causal rows
+    at the end of the valid prefix, so ``q_offset`` is implied
+    (``lengths - Sq``) and ignored on that path.  Unsupported calls
+    (non-float dtypes, malformed lengths) fall back to the chunked-XLA
+    path with the reason warned once + recorded on the plan.
     ``plan``: a resolved ``lower.runtime.PlanDispatch``; wins over the
     auto resolution and receives downgrade records.
     """
     b, hq, sq, d = q.shape
     skv, hkv = k.shape[2], k.shape[1]
-    impl, block_q, block_k, interpret = _resolve(
+    impl, block_q, block_k, interpret, plan = _resolve(
         "attention", impl, plan, sq, skv, d, hq, hkv, lengths,
         block_q, block_k, interpret)
+    if lengths is not None and impl == "pallas":
+        reason = _masked_unsupported(q, lengths, causal, q_offset, sq)
+        if reason is not None:
+            impl = _downgrade_lengths(plan, reason)
+        else:
+            return _pallas_attn_masked(
+                q, k, v, lengths, causal=causal, scale=scale,
+                block_q=block_q, block_k=block_k, interpret=interpret)
     if impl == "pallas":
         return _pallas_attn(q, k, v, causal, scale, q_offset,
                             block_q, block_k, interpret)
@@ -180,13 +262,23 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
                     interpret: bool = False,
                     plan: Optional[_plan_rt.PlanDispatch] = None):
     """Layer-fused Q-projection attention (paper Fig. 5b: Q = x @ Wq fused
-    into QK^T — Q never stored).  x: (B, Sq, E); wq: (E, Hq, D)."""
+    into QK^T — Q never stored).  x: (B, Sq, E); wq: (E, Hq, D).
+    ``lengths`` takes the masked scalar-prefetch kernel on the Pallas
+    path (see :func:`attention`)."""
     b, sq, e = x.shape
     hq, d = wq.shape[1], wq.shape[-1]
     skv, hkv = k.shape[2], k.shape[1]
-    impl, block_q, block_k, interpret = _resolve(
+    impl, block_q, block_k, interpret, plan = _resolve(
         "qproj_attention", impl, plan, sq, skv, d, hq, hkv, lengths,
         block_q, block_k, interpret)
+    if lengths is not None and impl == "pallas":
+        reason = _masked_unsupported(x, lengths, causal, q_offset, sq)
+        if reason is not None:
+            impl = _downgrade_lengths(plan, reason)
+        else:
+            return _pallas_qproj_attn_masked(
+                x, wq, k, v, lengths, causal=causal, scale=scale,
+                block_q=block_q, block_k=block_k, interpret=interpret)
     if impl == "pallas":
         return _pallas_qproj_attn(x, wq, k, v, causal, scale, q_offset,
                                   block_q, block_k, interpret)

@@ -86,7 +86,10 @@ def chunked_attention(
             s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             alpha = jnp.exp(m - m_new)
-            p = jnp.exp(s - m_new[..., None])
+            # the where keeps rows with no valid column yet (m_new still
+            # NEG_INF, so exp(s - m_new) = 1) out of the accumulators:
+            # a lengths[b] = 0 row must emit zeros, not mean(v)
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
             l_new = l * alpha + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bngqk,bnkd->bngqd", p,
                             vv.astype(jnp.float32))

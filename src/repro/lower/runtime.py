@@ -81,10 +81,14 @@ def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
                  harness).  Q-projection fusion needs the latter.
         rope / qk_norm: transformations applied between the Q
                  projection and the scores; either breaks Q-fusion.
-        lengths_masked: the call carries a ``lengths`` mask (decode
-                 over a partially-filled cache); the Pallas kernels
-                 have no masked variant yet, so fused paths fall back
-                 to the chunked-XLA streaming path (recorded).
+        lengths_masked: the call carries a ``lengths`` mask (decode /
+                 chunked prefill over a partially-filled cache).
+                 Masked decode is **legal Pallas**: the scalar-prefetch
+                 masked kernels (``fused_attention_masked`` /
+                 ``fused_qproj_attention_masked``) mask score tiles
+                 in-kernel and skip KV blocks past each row's valid
+                 prefix, so fused paths keep their planned impl — a
+                 note is left on the plan, never a downgrade.
     """
     path = plan.kernel_path
     if path == QPROJ_ATTENTION:
@@ -101,10 +105,9 @@ def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
             path = new
     impl = impl_for(path, backend, interpret)
     if lengths_masked and impl == "pallas":
-        plan.record_downgrade(
-            "masked-lengths Pallas variant not implemented "
-            "(tracked §Perf)", path, path)
-        impl = "xla"
+        plan.note("masked-lengths calls take the scalar-prefetch "
+                  "masked Pallas kernels (KV blocks past each row's "
+                  "valid prefix skipped)")
     t = plan.tiling
     return PlanDispatch(plan=plan, path=path, impl=impl,
                         block_q=t.block_q, block_k=t.block_kv,
@@ -140,8 +143,10 @@ class ServingPlan:
         kernel-path switch."""
         return 2 * self.head_dim
 
-    def _dispatch(self, phase: str, n: int) -> PlanDispatch:
+    def _dispatch(self, phase: str, n: int,
+                  decode_tokens: int = 1) -> PlanDispatch:
         plan = plan_cache.resolve_plan(self.cfg, phase, n,
+                                       decode_tokens=decode_tokens,
                                        n_blocks=self.n_blocks)
         d = dispatch(plan, backend=self.backend, interpret=self.interpret,
                      entry="attention",
@@ -159,6 +164,26 @@ class ServingPlan:
         ``ctx_len`` columns (cache prefix + the new token)."""
         return self._dispatch("decode", min(max(ctx_len, 1),
                                             self.max_len))
+
+    def chunk_dispatch(self, ctx_len: int, rows: int) -> PlanDispatch:
+        """The plan governing one *prefill chunk*: ``rows`` new query
+        rows whose scores span ``ctx_len`` columns (cache prefix +
+        the chunk).  The first chunk (no prefix) is plain prefill;
+        later chunks are the KV-cached regime and resolve like decode
+        with ``decode_tokens = rows`` — so a long prompt crossing a
+        context-bucket edge mid-prefill switches kernel path exactly
+        like decode does."""
+        ctx_len = min(max(ctx_len, 1), self.max_len)
+        if ctx_len <= rows:                      # no cache prefix yet
+            return self._dispatch("prefill", rows)
+        return self._dispatch("decode", ctx_len, decode_tokens=rows)
+
+    def bucket_of(self, ctx_len: int) -> int:
+        """The decode context bucket holding ``ctx_len`` — what the
+        batcher groups active slots by (slots in different buckets get
+        different plans, hence possibly different kernel paths)."""
+        return plan_cache.bucket_for(
+            "decode", min(max(ctx_len, 1), self.max_len), self.head_dim)
 
     def concrete_ctx(self, cache_len) -> int:
         """Host-side context length from a DecodeState's ``cache_len``

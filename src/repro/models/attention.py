@@ -14,7 +14,11 @@ The decision reaches this module two ways: ``impl="auto"`` resolves an
 LRU-cached ExecutionPlan from the call shapes inside kernels/ops.py,
 or the serving engine passes a ``lower.runtime.PlanDispatch`` (the
 ``plan`` kwarg) carrying the whole-network phase decision, plan-resolved
-tiling, and the downgrade ledger.
+tiling, and the downgrade ledger.  KV-cached calls (decode / chunked
+prefill) pass a ``lengths`` mask and stay on the planned Pallas path:
+ops routes them to the masked scalar-prefetch kernels, whose causal
+rows anchor at the end of the valid prefix — exactly this module's
+``q_offset = cache_len = lengths - s`` convention.
 
 KV caches: GQA stores (k, v) per layer; MLA stores the *latent* cache
 (c_kv + rope key), decoding in absorbed form — (B, S, 576) instead of

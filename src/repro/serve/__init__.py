@@ -1,8 +1,10 @@
-from repro.serve.engine import (DecodeState, decode_step, greedy_sample,
+from repro.serve.engine import (DecodeState, chunked_prefill,
+                                decode_step, greedy_sample,
                                 init_decode_state, make_serving_plan,
                                 prefill, serve_step)
 from repro.serve.batcher import Request, RequestBatcher
 
-__all__ = ["DecodeState", "decode_step", "greedy_sample",
+__all__ = ["DecodeState", "chunked_prefill", "decode_step",
+           "greedy_sample",
            "init_decode_state", "make_serving_plan", "prefill",
            "serve_step", "Request", "RequestBatcher"]

@@ -8,14 +8,16 @@ on host 0 and broadcasts slot assignments with the token batch — decode
 steps stay SPMD.
 
 Plan-awareness: the batcher tracks per-slot context lengths
-(prompt + generated so far), so with a ``lower.runtime.ServingPlan``
-the ``run`` loop resolves the ExecutionPlan governing the *deepest*
-active context each step and hands it to ``decode_fn`` — one SPMD
-decode step takes one kernel path, so the batch is planned for its
-longest row (the conservative direction: fusion gain only grows with
-context).  ``max_len`` bounds the cache geometry: prompts that cannot
-fit are rejected at ``submit``, and generation budgets are clamped so
-no row can overrun its cache.
+(prompt + generated so far).  With a ``lower.runtime.ServingPlan``,
+the ``run`` loop **groups active slots by context bucket**
+(``plan.bucket_of``) and dispatches one micro-batch per bucket: each
+group gets the PlanDispatch resolved for its own deepest context, so a
+short row keeps the cheap unfused path while a deep row in the same
+step runs the fused masked-Pallas path — per-slot plan dispatch
+instead of planning the whole batch for its deepest slot.
+``max_len`` bounds the cache geometry: prompts that cannot fit are
+rejected at ``submit``, and generation budgets are clamped so no row
+can overrun its cache.
 """
 
 from __future__ import annotations
@@ -75,20 +77,21 @@ class RequestBatcher:
     def active(self) -> bool:
         return any(s is not None for s in self.slots) or bool(self.queue)
 
-    @property
-    def context_len(self) -> int:
-        """Deepest active context (prompt + generated) across slots —
-        what the next decode step's score width is planned for."""
-        return max((self.slot_lens[i]
-                    for i, s in enumerate(self.slots) if s is not None),
-                   default=0)
-
     def step(self, next_tokens: np.ndarray) -> None:
         """Feed back one decoded token per slot."""
-        for i, req in enumerate(self.slots):
+        self.step_slots([i for i, s in enumerate(self.slots)
+                         if s is not None],
+                        [next_tokens[i] for i, s in enumerate(self.slots)
+                         if s is not None])
+
+    def step_slots(self, slot_ids: list, tokens) -> None:
+        """Feed back one decoded token for each slot in ``slot_ids``
+        (a micro-batch; other slots untouched)."""
+        for i, tok in zip(slot_ids, tokens):
+            req = self.slots[i]
             if req is None:
                 continue
-            tok = int(next_tokens[i])
+            tok = int(tok)
             req.generated.append(tok)
             self.slot_lens[i] += 1
             if tok == self.eos_id or \
@@ -98,13 +101,36 @@ class RequestBatcher:
                 self.slots[i] = None
                 self.slot_lens[i] = 0
 
+    def bucket_groups(self, plan) -> list:
+        """Active slots grouped by the context bucket their *next* step
+        falls in: ``[(bucket, [slot ids]), ...]`` shallow-first.  Each
+        group is one micro-batch dispatched under its own plan."""
+        groups: dict = {}
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                groups.setdefault(
+                    plan.bucket_of(self.slot_lens[i] + 1), []).append(i)
+        return sorted(groups.items())
+
     def run(self, prefill_fn: Callable, decode_fn: Callable,
             max_steps: int = 1000, plan=None) -> list:
         """Drive the loop: prefill_fn(slot_ids, prompts) seeds caches,
-        decode_fn() -> (B,) next tokens.  With a ``ServingPlan``,
-        decode_fn is instead called as decode_fn(dispatch) where
-        ``dispatch`` is the PlanDispatch for the batch's deepest
-        context + 1 (the step about to run)."""
+        decode_fn() -> (B,) next tokens.  With a ``ServingPlan``, the
+        step is split into per-context-bucket micro-batches:
+        decode_fn(dispatch, slot_ids) -> len(slot_ids) next tokens,
+        where ``dispatch`` is the PlanDispatch for that group's
+        deepest context + 1 — short rows keep the cheap unfused path
+        while deep rows run the fused masked-Pallas path in the same
+        step.
+
+        Contract: decode_fn must advance device state for the listed
+        ``slot_ids`` ONLY.  ``engine.decode_step`` is a whole-batch
+        step over one uniform ``cache_len`` and is NOT a valid
+        per-group decode_fn — invoked once per group it would append
+        to every row's KV cache per group, corrupting out-of-group
+        slots.  A per-group decode_fn must own per-slot state (one
+        DecodeState per bucket, or row gather/scatter with per-row
+        cache positions — see the ROADMAP item)."""
         steps = 0
         while self.active and steps < max_steps:
             new_slots = self._fill_slots()
@@ -112,10 +138,12 @@ class RequestBatcher:
                 prefill_fn(new_slots,
                            [self.slots[i].prompt for i in new_slots])
             if plan is not None:
-                toks = decode_fn(
-                    plan.decode_dispatch(self.context_len + 1))
+                for _, slot_ids in self.bucket_groups(plan):
+                    ctx = max(self.slot_lens[i] for i in slot_ids)
+                    toks = decode_fn(plan.decode_dispatch(ctx + 1),
+                                     slot_ids)
+                    self.step_slots(slot_ids, np.asarray(toks))
             else:
-                toks = decode_fn()
-            self.step(np.asarray(toks))
+                self.step(np.asarray(decode_fn()))
             steps += 1
         return self.finished

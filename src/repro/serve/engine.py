@@ -12,6 +12,11 @@ kernel path — when the KV context crosses a bucket edge; the first
 edge is the crossover itself.  Without a plan the config-driven
 dispatch is unchanged.
 
+Every KV-cached step (decode and each chunked-prefill chunk) carries a
+``lengths`` mask and stays on the planned Pallas path: the masked
+scalar-prefetch kernels mask score tiles in-kernel, so the resolved
+kernel path is the path that executes (zero lengths downgrades).
+
 Caches: GQA k/v ring, MLA latent (B,S,576), Mamba conv+state.
 
 ``serve_step`` is what the dry-run lowers for decode_* shapes: one new
@@ -89,6 +94,35 @@ def prefill(params, cfg: ModelConfig, tokens, state: DecodeState, *,
         cache_len=0, interpret=interpret, plan=dispatch)
     s = logits.shape[1]
     return DecodeState(cache=new_cache,
+                       cache_len=jnp.asarray(s, jnp.int32),
+                       last_token=greedy_sample(logits))
+
+
+def chunked_prefill(params, cfg: ModelConfig, tokens,
+                    state: DecodeState, *, chunk_size: int,
+                    plan=None, interpret: bool = False) -> DecodeState:
+    """Prefill a long prompt in ``chunk_size``-token chunks, appending
+    each chunk to the KV cache — and, with a ``ServingPlan``,
+    **re-resolving the ExecutionPlan per chunk** (``chunk_dispatch``):
+    the first chunk is plain prefill, later chunks are the KV-cached
+    regime (M = chunk rows vs C = prefix + chunk columns), so a prompt
+    crossing a context-bucket edge mid-prefill switches kernel path at
+    the edge exactly like decode does.  Every chunk after the first
+    carries a ``lengths`` mask, i.e. runs the masked Pallas kernels on
+    the Pallas path."""
+    b, s = tokens.shape
+    cache = state.cache
+    logits = None
+    for start in range(0, s, chunk_size):
+        piece = tokens[:, start:start + chunk_size]
+        dispatch = None
+        if plan is not None:
+            dispatch = plan.chunk_dispatch(start + piece.shape[1],
+                                           piece.shape[1])
+        logits, cache = tf.forward(
+            params, cfg, tokens=piece, cache=cache, cache_len=start,
+            interpret=interpret, plan=dispatch)
+    return DecodeState(cache=cache,
                        cache_len=jnp.asarray(s, jnp.int32),
                        last_token=greedy_sample(logits))
 

@@ -130,12 +130,16 @@ def test_dispatch_legalises_qproj_and_records():
     assert "downgrade" in plan.describe()
 
 
-def test_dispatch_masked_lengths_downgrades_pallas():
+def test_dispatch_masked_lengths_stays_pallas():
+    """Masked decode is legal Pallas (the scalar-prefetch masked
+    kernels): fused paths keep their planned impl, the plan gets a
+    note, and the downgrade ledger stays empty."""
     plan = lower.lower(toy_cfg(), "decode", 256)
     d = lower.dispatch(plan, backend="tpu", entry="qproj_attention",
                        lengths_masked=True)
-    assert d.path == lower.QPROJ_ATTENTION and d.impl == "xla"
-    assert any("masked-lengths" in g.reason for g in plan.downgrades)
+    assert d.path == lower.QPROJ_ATTENTION and d.impl == "pallas"
+    assert not plan.downgrades
+    assert any("masked-lengths" in n for n in plan.notes)
 
 
 def test_impl_for_backend_matrix():
@@ -227,22 +231,50 @@ def test_ops_auto_resolves_through_plan_cache():
 
 @needs_jax
 @pytest.mark.slow
-def test_ops_lengths_pallas_downgrade_warns_once():
+def test_ops_lengths_pallas_runs_masked_kernel_without_warning():
+    """impl='pallas' + lengths executes the masked scalar-prefetch
+    kernel (no silent downgrade, no warning) and matches the
+    materialising reference."""
     from repro.kernels import ops
     q = jax.random.normal(jax.random.PRNGKey(0), (2, 2, 1, 32))
     k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 32))
     v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 16, 32))
     lengths = jnp.array([8, 16], jnp.int32)
-    ops._warned_lengths_downgrade = False
+    ops.reset_lengths_downgrade_warning()
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         o = ops.attention(q, k, v, causal=False, lengths=lengths,
+                          impl="pallas", interpret=True)
+    assert not [x for x in w if "masked-lengths" in str(x.message)], \
+        "masked lengths must not downgrade off the Pallas path"
+    o_ref = ops.attention(q, k, v, causal=False, lengths=lengths,
+                          impl="reference")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@needs_jax
+@pytest.mark.slow
+def test_ops_lengths_downgrade_warns_once_with_reason():
+    """The remaining ledger path: calls the masked kernel cannot serve
+    (here: non-integral lengths) warn exactly once and record the
+    concrete reason."""
+    from repro.kernels import ops
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 2, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 16, 32))
+    bad = jnp.array([8.0, 16.0], jnp.float32)
+    ops.reset_lengths_downgrade_warning()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        o = ops.attention(q, k, v, causal=False, lengths=bad,
                           impl="pallas")
-        ops.attention(q, k, v, causal=False, lengths=lengths,
-                      impl="pallas")
+        ops.attention(q, k, v, causal=False, lengths=bad, impl="pallas")
     msgs = [x for x in w if "masked-lengths" in str(x.message)]
     assert len(msgs) == 1, "downgrade must warn exactly once"
-    o_ref = ops.attention(q, k, v, causal=False, lengths=lengths,
+    assert "integral" in str(msgs[0].message)
+    o_ref = ops.attention(q, k, v, causal=False,
+                          lengths=bad.astype(jnp.int32),
                           impl="reference")
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
@@ -328,11 +360,17 @@ def test_serve_plan_end_to_end_equivalence_and_crossover(arch):
     assert lower.UNFUSED in paths.values()
     assert lower.FUSED_ATTENTION in paths.values()
 
-    # the fused decode steps wanted Pallas (interpret) but carry the
-    # masked-lengths downgrade — recorded, never silent
+    # acceptance: the fused decode steps really executed Pallas (the
+    # masked scalar-prefetch kernel) — ZERO lengths downgrades; the
+    # resolved kernel path is the path that ran
+    fused_steps = [r for r in decode_res
+                   if r[3] == lower.FUSED_ATTENTION]
+    assert fused_steps and all(r[4] == "pallas" for r in fused_steps)
     above = lower.resolve_plan(cfg, "decode", crossover + 1,
                                n_blocks=cfg.n_layers)
-    assert any("masked-lengths" in g.reason for g in above.downgrades)
+    assert not any("masked-lengths" in g.reason
+                   for g in above.downgrades), above.downgrades
+    assert any("masked-lengths" in n for n in above.notes)
 
 
 @needs_jax

@@ -104,27 +104,86 @@ def test_batcher_request_longer_than_max_len():
     assert len(done[0].prompt) + len(done[0].generated) <= 8
 
 
-def test_batcher_plan_aware_run_switches_kernel_path():
-    """With a ServingPlan, run() hands decode_fn the PlanDispatch for
-    the batch's deepest context — and the dispatched kernel path
-    switches when that context crosses the alpha_kv crossover."""
+def test_batcher_plan_aware_run_dispatches_per_bucket_micro_batches():
+    """With a ServingPlan, run() groups active slots by context bucket
+    and dispatches one micro-batch per bucket: a short row and a deep
+    row get DIFFERENT kernel paths in the same step once the deep
+    row's context crosses the alpha_kv crossover (2N = 64)."""
     from repro import lower
     cfg = configs.get_config("qwen3-8b", smoke=True)   # N=32, 2N=64
-    plan = lower.serving_plan(cfg, max_len=96)
-    b = RequestBatcher(batch_size=2, eos_id=-1, max_len=96)
+    plan = lower.serving_plan(cfg, max_len=192)
+    b = RequestBatcher(batch_size=2, eos_id=-1, max_len=192)
     b.submit(Request(uid=0, prompt=list(range(60)), max_new_tokens=8))
     b.submit(Request(uid=1, prompt=list(range(3)), max_new_tokens=8))
-    paths = []
+    calls = []          # (path, slot_ids) per micro-batch dispatch
 
-    def decode_fn(dispatch):
-        paths.append(dispatch.path)
-        return np.array([1, 1])
+    def decode_fn(dispatch, slot_ids):
+        calls.append((dispatch.path, tuple(slot_ids)))
+        return np.ones(len(slot_ids), np.int32)
 
-    b.run(lambda s, p: None, decode_fn, max_steps=10, plan=plan)
-    # contexts 61..68 cross 2N = 64: unfused first, fused after
-    assert paths[:3] == [lower.UNFUSED] * 3
-    assert set(paths[4:]) == {lower.FUSED_ATTENTION}
-    assert [r[1] for r in plan.resolutions] == list(range(61, 69))
+    b.run(lambda s, p: None, decode_fn, max_steps=16, plan=plan)
+
+    # both slots start in the first (<= 2N) bucket: one micro-batch
+    assert calls[0] == (lower.UNFUSED, (0, 1))
+    # once slot 0 crosses 64 the step splits into two micro-batches
+    # (shallow bucket first) with different kernel paths
+    split_steps = [(a, c) for a, c in zip(calls, calls[1:])
+                   if a[1] == (1,) and c[1] == (0,)]
+    assert split_steps, f"no split step found: {calls}"
+    short, deep = split_steps[0]
+    assert short[0] == lower.UNFUSED           # short row stays cheap
+    assert deep[0] == lower.FUSED_ATTENTION    # deep row streams
+
+
+def test_chunked_prefill_matches_one_shot_and_switches_paths():
+    """Plan-aware chunked prefill: (a) numerically equivalent to the
+    one-shot prefill, (b) re-resolves the plan per chunk, so a long
+    prompt crossing the context-bucket edge mid-prefill switches
+    kernel path at the edge (unfused -> fused_attention past 2N)."""
+    from repro import lower
+    from repro.serve import chunked_prefill, make_serving_plan
+    cfg = configs.get_config("qwen3-8b", smoke=True)   # N=32, 2N=64
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(8), (1, 96), 0,
+                                cfg.vocab_size)
+    lower.clear_plan_cache()
+    plan = make_serving_plan(cfg, max_len=128)
+
+    s1 = init_decode_state(cfg, 1, 128, jnp.float32)
+    s1 = prefill(params, cfg, prompt, s1, plan=plan)
+    s2 = init_decode_state(cfg, 1, 128, jnp.float32)
+    s2 = chunked_prefill(params, cfg, prompt, s2, chunk_size=16,
+                         plan=plan)
+    np.testing.assert_array_equal(np.asarray(s1.last_token),
+                                  np.asarray(s2.last_token))
+    assert int(s2.cache_len) == 96
+
+    # chunk resolutions: ctx 16 (prefill), then decode-regime chunks at
+    # ctx 32..96 — the path switches exactly past the 2N = 64 edge
+    chunk_res = plan.resolutions[1:]          # [0] is the one-shot
+    paths = {ctx: path for (_, ctx, _, path, _) in chunk_res}
+    assert paths[32] == lower.UNFUSED and paths[64] == lower.UNFUSED
+    assert paths[80] == lower.FUSED_ATTENTION
+    assert paths[96] == lower.FUSED_ATTENTION
+
+
+def test_chunked_prefill_then_decode_consistent():
+    """Decode after a chunked prefill continues the same greedy chain
+    as decode after a one-shot prefill."""
+    cfg = configs.get_config("qwen3-8b", smoke=True)
+    from repro.serve import chunked_prefill
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 20), 0,
+                                cfg.vocab_size)
+    s1 = init_decode_state(cfg, 2, 48, jnp.float32)
+    s1 = prefill(params, cfg, prompt, s1)
+    s2 = init_decode_state(cfg, 2, 48, jnp.float32)
+    s2 = chunked_prefill(params, cfg, prompt, s2, chunk_size=7)
+    for _ in range(3):
+        s1, _ = decode_step(params, cfg, s1)
+        s2, _ = decode_step(params, cfg, s2)
+        np.testing.assert_array_equal(np.asarray(s1.last_token),
+                                      np.asarray(s2.last_token))
 
 
 def test_greedy_decode_matches_forward_argmax():

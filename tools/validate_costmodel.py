@@ -17,9 +17,14 @@ For each (config, phase, shape) cell the harness:
    per-schedule shape-scaling agreement (do predicted and measured
    grow together?).
 
-Downgrades recorded on the plans (masked-lengths fallback, Q-fusion
-legality) are printed with the table, so a measured number is never
-attributed to a path that did not run.
+Decode cells are additionally run in the *serving regime* — a
+``lengths`` mask over a KV cache — which now executes the masked
+scalar-prefetch Pallas kernels on the Pallas path: the
+``dse+lengths`` rows carry a ``lengths_downgrades`` count that must
+be 0 (the planned kernel path is the executed path).  Downgrades
+recorded on the plans (Q-fusion legality, residual masked-lengths
+dtype gates) are printed with the table, so a measured number is
+never attributed to a path that did not run.
 
 Predicted cycles cover the full lowered block (attention + FFN; the
 FFN term is identical across candidate schedules of one cell, so
@@ -90,6 +95,41 @@ def _candidate_fn(dispatch, causal: bool, q_offset: int):
                 q, k, v, causal=causal, q_offset=q_offset,
                 plan=dispatch, interpret=dispatch.interpret)
     return f
+
+
+def _masked_cell(cfg, arch: str, n: int, jax_backend: str,
+                 interpret: bool, repeats: int) -> dict:
+    """The serving-regime decode cell: the DSE plan executed WITH a
+    ``lengths`` mask over an n-deep cache (what every KV-cached serve
+    step passes).  On the Pallas path this runs the masked
+    scalar-prefetch kernel; ``lengths_downgrades`` must be 0."""
+    plan = lower.lower(cfg, "decode", n, bucket=n)
+    d = lower.dispatch(plan, backend=jax_backend, interpret=interpret,
+                       entry="attention", lengths_masked=True)
+    x, wq, k, v, _ = _inputs(cfg, "decode", n)
+    lens = jnp.full((x.shape[0],), n, jnp.int32)
+
+    def fn(x, wq, k, v):
+        q = jnp.einsum("bse,ehd->bhsd", x, wq)
+        return ops.attention(q, k, v, causal=True, lengths=lens,
+                             plan=d, interpret=d.interpret)
+
+    us = _measure_us(fn, (x, wq, k, v), repeats)
+    pred = plan.predict()
+    return {
+        "name": f"{arch}_decode{n}_dse+lengths",
+        "kind": "run", "arch": arch, "phase": "decode", "n": n,
+        "schedule": "dse+lengths", "policy": plan.block(0).policy,
+        "path": d.path, "impl": d.impl,
+        "predicted_cycles": round(pred.latency_cycles),
+        "predicted_peak_words": pred.peak_active_words,
+        "measured_us": round(us, 1),
+        "downgrades": [f"{g.from_path}->{g.to_path}: {g.reason}"
+                       for g in plan.downgrades],
+        "lengths_downgrades": sum(
+            g.count for g in plan.downgrades
+            if "masked-lengths" in g.reason),
+    }
 
 
 def _measure_us(fn, args, repeats: int) -> float:
@@ -172,6 +212,9 @@ def validate(archs=("qwen3-8b", "starcoder2-7b"), *, smoke: bool = True,
                     rows.append(row)
                     cell.append(row)
                     by_schedule.setdefault(label, []).append(row)
+                if phase == "decode":
+                    rows.append(_masked_cell(
+                        cfg, arch, n, jax_backend, interpret, repeats))
                 frac, pairs = _concordance(
                     [(r["predicted_cycles"], r["measured_us"])
                      for r in cell])
@@ -209,6 +252,12 @@ def _print_table(rows) -> None:
                   f"{r['measured_us']:10.1f}")
             for g in r["downgrades"]:
                 print(f"{'':34} ! {g}")
+        masked = [r for r in runs if "lengths_downgrades" in r]
+        if masked:
+            total = sum(r["lengths_downgrades"] for r in masked)
+            print(f"masked-decode (dse+lengths) cells: {len(masked)}, "
+                  f"lengths downgrades: {total} "
+                  f"{'(planned path executed)' if total == 0 else ''}")
         print()
     for kind, title in (("ranking", "schedule-ranking agreement "
                          "(predicted-faster is measured-faster)"),
