@@ -5,7 +5,8 @@ re-expression of the paper's alpha) — plus the masked-decode shapes:
 the scalar-prefetch masked kernel over a padded KV cache, short vs
 full ``lengths``, showing decode cost proportional to the *actual*
 context (KV blocks wholly past ``lengths[b]`` are skipped) and zero
-lengths downgrades on the Pallas path."""
+lengths downgrades on the Pallas path — plus the decode fusion ladder
+(unfused vs Q-fused vs megakernel) over several context depths."""
 
 import time
 
@@ -14,7 +15,7 @@ import jax.numpy as jnp
 
 from repro import lower
 from repro.core import codesign
-from repro.kernels import ops
+from repro.kernels import ops, ref
 from repro.kernels.fused_attention import fused_attention_masked
 
 
@@ -77,6 +78,78 @@ def _masked_decode_rows() -> list:
     }]
 
 
+def _decode_ladder_rows() -> list:
+    """The decode fusion ladder end to end: the whole M=1 attention
+    sub-block (Q projection + RoPE .. output projection + residual)
+    timed as (a) the unfused materialising composition, (b) the Q-fused
+    qproj rung, (c) the megakernel composition (ONE launch on the
+    Pallas path; the streaming-XLA composition is timed here since the
+    Pallas kernels target TPU), at several context depths.  The
+    reported path/impl come from the real plan dispatch — with the
+    lengths-downgrade count, so the row says which path the numbers
+    label."""
+    key = jax.random.PRNGKey(7)
+    b, hq, hkv, d, e, theta = 4, 8, 2, 128, 1024, 1e4
+    x = jax.random.normal(key, (b, 1, e), jnp.float32) * 0.1
+    wq = jax.random.normal(jax.random.fold_in(key, 1),
+                           (e, hq, d), jnp.float32) / e ** 0.5
+    wo = jax.random.normal(jax.random.fold_in(key, 2),
+                           (hq, d, e), jnp.float32) / (hq * d) ** 0.5
+    res = jax.random.normal(jax.random.fold_in(key, 3),
+                            (b, 1, e), jnp.float32)
+
+    rows = []
+    for skv in (512, 2048, 8192):
+        k = jax.random.normal(jax.random.fold_in(key, 4),
+                              (b, hkv, skv, d), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 5),
+                              (b, hkv, skv, d), jnp.float32)
+        lens = jnp.full((b,), skv, jnp.int32)
+
+        def unfused(x, k, v, res):
+            q = jnp.einsum("bse,ehd->bhsd", x, wq)
+            q = ref.rope(q, ref.rope_positions(1, skv, lengths=lens),
+                         theta)
+            o = ops.attention(q, k, v, causal=False, lengths=lens,
+                              impl="reference")
+            y = jnp.einsum("bhse,hed->bsd", o, wo)
+            return res + y
+
+        def qproj(x, k, v, res):
+            o = ops.qproj_attention(x, wq, k, v, causal=False,
+                                    lengths=lens, rope_theta=theta,
+                                    impl="xla")
+            return res + jnp.einsum("bhse,hed->bsd", o, wo)
+
+        def mega(x, k, v, res):
+            return ops.decode_block(x, wq, k, v, wo, res, lens,
+                                    rope_theta=theta, impl="xla")
+
+        us = {name: _time(jax.jit(fn), x, k, v, res, iters=10)
+              for name, fn in [("unfused", unfused), ("qproj", qproj),
+                               ("megakernel", mega)]}
+
+        lower.clear_plan_cache()
+        plan = lower.kernel_plan(seq_q=1, seq_kv=skv, d_head=d,
+                                 n_heads=hq, n_kv_heads=hkv)
+        disp = lower.dispatch(plan, backend=jax.default_backend(),
+                              entry="decode_block", rope=True,
+                              lengths_masked=True)
+        rows.append({
+            "name": f"kernel_decode_ladder_ctx{skv}",
+            "b": b, "hq": hq, "hkv": hkv, "d": d, "e": e, "ctx": skv,
+            "us_unfused": round(us["unfused"], 1),
+            "us_qproj": round(us["qproj"], 1),
+            "us_megakernel": round(us["megakernel"], 1),
+            "tokens_per_s_megakernel": round(b * 1e6 / us["megakernel"]),
+            "planned_path": disp.path, "impl": disp.impl,
+            "lengths_downgrades": sum(
+                g.count for g in plan.downgrades
+                if "masked-lengths" in g.reason),
+        })
+    return rows
+
+
 def run() -> list:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -101,6 +174,7 @@ def run() -> list:
                 codesign.fused_traffic_gain(skv, d), 4),
         })
     rows.extend(_masked_decode_rows())
+    rows.extend(_decode_ladder_rows())
     return rows
 
 

@@ -1,7 +1,10 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 table + the engine/block-exploration benches.  Prints
 ``name,us_per_call,derived`` CSV lines per the repo contract plus a
-readable report.
+readable report, and drops one machine-readable ``BENCH_<area>.json``
+per module run (rows verbatim — config/shape fields, wall-clock,
+tokens/s, kernel path, lengths_downgrades as each module reports them)
+so dashboards and regression diffs never re-parse the CSV.
 
     PYTHONPATH=src python -m benchmarks.run                 # everything
     PYTHONPATH=src python -m benchmarks.run --only fig6_alpha
@@ -9,11 +12,13 @@ readable report.
 
 ``--only`` takes a module name (repeatable) and skips importing the
 unselected modules, so e.g. the pure-DSE figures run without JAX.
+``--outdir`` relocates the JSON artifacts (default: cwd).
 """
 
 import argparse
 import importlib
 import json
+import pathlib
 import time
 
 # module name -> import path, in report order
@@ -30,6 +35,10 @@ MODULES = {
     "roofline": "benchmarks.roofline",
 }
 
+# module name -> JSON artifact area (default: the module name itself)
+AREAS = {"kernel_bench": "kernels", "engine_bench": "engine",
+         "blocks_bench": "blocks", "lowering_bench": "lowering"}
+
 
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
@@ -37,8 +46,13 @@ def main(argv=None) -> None:
                         metavar="FIGURE",
                         help="run only this module (repeatable); "
                              f"one of: {', '.join(MODULES)}")
+    parser.add_argument("--outdir", default=".",
+                        help="directory for the BENCH_<area>.json "
+                             "artifacts (default: cwd)")
     args = parser.parse_args(argv)
     selected = args.only or list(MODULES)
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for name in MODULES:
         if name not in selected:
@@ -47,6 +61,11 @@ def main(argv=None) -> None:
         t0 = time.perf_counter()
         rows = mod.run()
         us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        area = AREAS.get(name, name)
+        artifact = {"bench": name, "area": area,
+                    "us_per_row": round(us, 1), "rows": rows}
+        (outdir / f"BENCH_{area}.json").write_text(
+            json.dumps(artifact, indent=2, default=str) + "\n")
         for r in rows:
             rname = r.pop("name")
             print(f"{rname},{us:.0f},\"{json.dumps(r)}\"")

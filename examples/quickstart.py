@@ -50,8 +50,8 @@ def run_kernels():
     x = jax.random.normal(key, (1, 64, 512)) * 0.1
     wq = jax.random.normal(jax.random.fold_in(key, 3), (512, 4, 64)) * .05
     from repro.kernels.fused_qproj_attention import fused_qproj_attention
-    o2 = fused_qproj_attention(x, wq, k, v, True, None, None, 64, 128,
-                               True)
+    o2 = fused_qproj_attention(x, wq, k, v, True, None, None, None, 64,
+                               128, True)
     o2_ref = ref.qproj_attention_reference(x, wq, k, v, causal=True)
     print(f"  fuse[Q->QKT]       (M=64 < N=512): max err "
           f"{float(jnp.abs(o2 - o2_ref).max()):.2e} "

@@ -318,6 +318,8 @@ class PhasePlan:
     alpha: float                # predicted memory gain of the choice
     workload: wl.Workload       # the n-block network
     schedule: sch.Schedule      # the assembled network schedule
+    fuse_block: bool = False    # decode megakernel: heads + output
+    #                             projection + residual in ONE stage
 
     def evaluate(self, accel: Optional[Accelerator] = None,
                  row_block: Optional[int] = None) -> sch.Result:
@@ -362,11 +364,16 @@ def phase_policy(phase: str, M: int, score_cols: int,
 def _phase_block_stages(prefix: str, n_heads: int, n_kv_heads: int,
                         mlp: str, norm: str,
                         fuse_q: bool, fuse_scores: bool,
-                        core: int = 0) -> list[sch.Stage]:
+                        core: int = 0,
+                        fuse_block: bool = False) -> list[sch.Stage]:
     """Stages of one network block under the chosen fusion flags.
     Layer names follow ``workload._add_transformer_block``; the FFN and
     norms run layer-by-layer (their intermediates are the block's
-    smallest)."""
+    smallest).  ``fuse_block`` assembles the decode megakernel stage:
+    every head chain, the per-head output projections, their
+    accumulation and the residual add in ONE stage with every internal
+    edge streamed (the engine model of
+    ``kernels/fused_decode_block.py``)."""
     p = prefix
 
     def stage(*layers, streamed=()):
@@ -379,30 +386,56 @@ def _phase_block_stages(prefix: str, n_heads: int, n_kv_heads: int,
     for g in range(n_kv_heads):
         out.append(stage(f"{p}kv{g}.K"))
         out.append(stage(f"{p}kv{g}.V"))
-    for h in range(n_heads):
-        q, qkt = f"{p}h{h}.Q", f"{p}h{h}.QKT"
-        sm, av = f"{p}h{h}.SM", f"{p}h{h}.AV"
-        head = [q, qkt, sm, av]
-        edges = set()
-        if fuse_q:
-            edges.add((q, qkt))
-        if fuse_scores:
-            edges.update({(qkt, sm), (sm, av)})
-        # split the head chain into contiguous fused runs
-        cur = [head[0]]
-        for a, b in zip(head, head[1:]):
-            if (a, b) in edges:
-                cur.append(b)
+    if fuse_block:
+        # layer order mirrors the workload builder's insertion order
+        # (all head chains, then proj0, proj1, acc1, proj2, acc2, ...)
+        layers: list[str] = []
+        edges: set[tuple[str, str]] = set()
+        for h in range(n_heads):
+            q, qkt = f"{p}h{h}.Q", f"{p}h{h}.QKT"
+            sm, av = f"{p}h{h}.SM", f"{p}h{h}.AV"
+            layers += [q, qkt, sm, av]
+            edges |= {(q, qkt), (qkt, sm), (sm, av)}
+        prev = None
+        for h in range(n_heads):
+            proj = f"{p}proj{h}"
+            layers.append(proj)
+            edges.add((f"{p}h{h}.AV", proj))
+            if prev is None:
+                prev = proj
             else:
-                out.append(stage(*cur, streamed={e for e in edges
-                                                 if e[1] in cur}))
-                cur = [b]
-        out.append(stage(*cur, streamed={e for e in edges
-                                         if e[1] in cur}))
-        out.append(stage(f"{p}proj{h}"))
-        if h > 0:
-            out.append(stage(f"{p}acc{h}"))
-    out.append(stage(f"{p}res1"))
+                acc = f"{p}acc{h}"
+                layers.append(acc)
+                edges |= {(prev, acc), (proj, acc)}
+                prev = acc
+        layers.append(f"{p}res1")
+        edges.add((prev, f"{p}res1"))
+        out.append(stage(*layers, streamed=edges))
+    else:
+        for h in range(n_heads):
+            q, qkt = f"{p}h{h}.Q", f"{p}h{h}.QKT"
+            sm, av = f"{p}h{h}.SM", f"{p}h{h}.AV"
+            head = [q, qkt, sm, av]
+            edges = set()
+            if fuse_q:
+                edges.add((q, qkt))
+            if fuse_scores:
+                edges.update({(qkt, sm), (sm, av)})
+            # split the head chain into contiguous fused runs
+            cur = [head[0]]
+            for a, b in zip(head, head[1:]):
+                if (a, b) in edges:
+                    cur.append(b)
+                else:
+                    out.append(stage(*cur, streamed={e for e in edges
+                                                     if e[1] in cur}))
+                    cur = [b]
+            out.append(stage(*cur, streamed={e for e in edges
+                                             if e[1] in cur}))
+            out.append(stage(f"{p}proj{h}"))
+            if h > 0:
+                out.append(stage(f"{p}acc{h}"))
+        out.append(stage(f"{p}res1"))
     out.append(stage(f"{p}ln2" if norm == "pre" else f"{p}ln1"))
     if mlp == "silu_glu":
         ffn = ["gate", "up", "act", "mul", "down"]
@@ -422,7 +455,8 @@ def phase_schedule(config, phase: str, seq_len: int, *,
                    decode_tokens: int = 1, n_blocks: int = 1,
                    norm: str = "pre", layer_index: int = 0,
                    fuse_q: Optional[bool] = None,
-                   fuse_scores: Optional[bool] = None) -> PhasePlan:
+                   fuse_scores: Optional[bool] = None,
+                   fuse_block: Optional[bool] = None) -> PhasePlan:
     """Select and assemble the phase-aware whole-network schedule for
     ``config`` (a ModelConfig-like object, see
     ``workload.from_model_config``).
@@ -460,16 +494,27 @@ def phase_schedule(config, phase: str, seq_len: int, *,
                                        dims["d_head"])
     fuse_q = rule_q if fuse_q is None else fuse_q
     fuse_scores = rule_scores if fuse_scores is None else fuse_scores
+    if fuse_block is None:
+        # the megakernel is the M=1 decode endpoint of the fusion
+        # ladder: it only exists past the alpha_kv crossover (both
+        # fusion flags on) and for single-token steps, where the whole
+        # attention sub-block collapses to one streamed row
+        fuse_block = (phase == "decode" and M == 1
+                      and fuse_q and fuse_scores)
+    if fuse_block and not (fuse_q and fuse_scores):
+        raise ValueError("fuse_block requires fuse_q and fuse_scores: "
+                         "the megakernel subsumes both fusions")
     net = wl.network(config, n_blocks, phase=phase, seq_len=M,
                      n_ctx=n_ctx, norm=norm, layer_index=layer_index)
     stages: list[sch.Stage] = []
     for p in net.period_prefixes:
         stages.extend(_phase_block_stages(
             p, dims["n_heads"], dims["n_kv_heads"], dims["mlp"], norm,
-            fuse_q, fuse_scores))
-    policy = {(False, False): "lbl", (True, False): "fuse_q_qkt",
-              (False, True): "fuse_pv", (True, True): "fuse_all"}[
-        (fuse_q, fuse_scores)]
+            fuse_q, fuse_scores, fuse_block=fuse_block))
+    policy = "megakernel" if fuse_block else \
+        {(False, False): "lbl", (True, False): "fuse_q_qkt",
+         (False, True): "fuse_pv", (True, True): "fuse_all"}[
+            (fuse_q, fuse_scores)]
     schedule = sch.Schedule(
         name=f"phase[{phase}:{policy}]x{n_blocks}", stages=tuple(stages))
     # the stage assembly mirrors workload's builder names; a desync
@@ -484,4 +529,5 @@ def phase_schedule(config, phase: str, seq_len: int, *,
     return PhasePlan(phase=phase, M=M, score_cols=score_cols,
                      head_dim=dims["d_head"], fuse_q=fuse_q,
                      fuse_scores=fuse_scores, policy=policy,
-                     alpha=alpha, workload=net, schedule=schedule)
+                     alpha=alpha, workload=net, schedule=schedule,
+                     fuse_block=fuse_block)

@@ -29,6 +29,7 @@ optimisation re-expressed for the MXU.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -542,6 +543,28 @@ fused_attention.defvjp(_fa_fwd, _fa_bwd)
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
+
+def _rope_tile(q, pos0, theta: float):
+    """Rotate a (bq, d) Q tile in-register: row r gets rotary position
+    ``pos0 + r`` (``pos0`` may be a traced scalar — e.g. the scalar-
+    prefetched ``length - sq`` of the masked kernels).  Half-split
+    rotation with the same frequency schedule as ``models.common.rope``
+    (``exp(-i * log(theta) / half)``), computed in fp32.  Pallas TPU has
+    no 1-D iota, so both the frequency index and the row index are 2-D
+    ``broadcasted_iota`` planes."""
+    bq, d = q.shape
+    half = d // 2
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bq, half), 1)
+    freqs = jnp.exp(idx.astype(jnp.float32)
+                    * (-math.log(theta) / half))
+    rows = pos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, half), 0)
+    ang = rows.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = q[:, :half].astype(jnp.float32)
+    x2 = q[:, half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
 
 def _round_up(n: int, m: int = LANES) -> int:
     return max(m, ((n + m - 1) // m) * m)

@@ -25,6 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import CompilerParams
 
 from repro.kernels import fused_attention as fa
+from repro.kernels import ref
 
 NEG_INF = fa.NEG_INF
 LANES = fa.LANES
@@ -33,7 +34,7 @@ LANES = fa.LANES
 def _qproj_fwd_kernel(x_ref, wq_ref, k_ref, v_ref, o_ref, lse_ref,
                       q_scr, acc_ref, m_ref, l_ref, *,
                       causal: bool, scale: float, q_offset: int,
-                      kv_len: int):
+                      kv_len: int, rope_theta):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -42,10 +43,16 @@ def _qproj_fwd_kernel(x_ref, wq_ref, k_ref, v_ref, o_ref, lse_ref,
 
     @pl.when(kj == 0)
     def _init():
-        # the fusion: Q tile built in VMEM, never written to HBM
-        q_scr[...] = jax.lax.dot_general(
+        # the fusion: Q tile built in VMEM, never written to HBM — and,
+        # with rope_theta, rotated in-register (row r sits at global
+        # position q_offset + qi*bq + r), so RoPE no longer forces Q to
+        # materialise between the projection and the scores
+        q = jax.lax.dot_general(
             x_ref[0], wq_ref[0], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if rope_theta is not None:
+            q = fa._rope_tile(q, q_offset + qi * bq, rope_theta)
+        q_scr[...] = q
         fa._init_softmax_state(acc_ref, m_ref, l_ref)
 
     run = True
@@ -74,8 +81,8 @@ def _qproj_fwd_kernel(x_ref, wq_ref, k_ref, v_ref, o_ref, lse_ref,
         fa._emit_softmax_out(o_ref, lse_ref, acc_ref, m_ref, l_ref)
 
 
-def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
-               interpret):
+def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, rope_theta,
+               block_q, block_k, interpret):
     b, sq, e = x.shape
     eh, hq, d = wq.shape
     assert eh == e
@@ -93,7 +100,7 @@ def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
     kernel = functools.partial(
         _qproj_fwd_kernel, causal=causal, scale=scale,
         q_offset=(skv - sq) if q_offset is None else q_offset,
-        kv_len=skv)
+        kv_len=skv, rope_theta=rope_theta)
     o, lse = pl.pallas_call(
         kernel,
         grid=(b * hq, nq, nk),
@@ -138,7 +145,8 @@ def _qproj_fwd(x, wq, k, v, *, causal, scale, q_offset, block_q, block_k,
 
 def _qproj_masked_fwd_kernel(len_ref, x_ref, wq_ref, k_ref, v_ref, o_ref,
                              q_scr, acc_ref, m_ref, l_ref, *,
-                             causal: bool, scale: float, hq: int, sq: int):
+                             causal: bool, scale: float, hq: int, sq: int,
+                             rope_theta):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -148,10 +156,17 @@ def _qproj_masked_fwd_kernel(len_ref, x_ref, wq_ref, k_ref, v_ref, o_ref,
 
     @pl.when(kj == 0)
     def _init():
-        # the fusion: Q tile built in VMEM, never written to HBM
-        q_scr[...] = jax.lax.dot_general(
+        # the fusion: Q tile built in VMEM, never written to HBM.  With
+        # rope_theta the tile is rotated in-register against the scalar-
+        # prefetched length: rows anchor at the END of the valid prefix,
+        # so global row r sits at rotary position length - sq + r (for
+        # M=1 decode that is exactly length - 1)
+        q = jax.lax.dot_general(
             x_ref[0], wq_ref[0], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if rope_theta is not None:
+            q = fa._rope_tile(q, length - sq + qi * bq, rope_theta)
+        q_scr[...] = q
         fa._init_softmax_state(acc_ref, m_ref, l_ref)
 
     @pl.when(fa._masked_run(length, qi, kj, bq, bk, sq, causal))
@@ -173,14 +188,20 @@ def _qproj_masked_fwd_kernel(len_ref, x_ref, wq_ref, k_ref, v_ref, o_ref,
 
 def fused_qproj_attention_masked(x, wq, k, v, lengths, *,
                                  causal: bool = True, scale=None,
+                                 rope_theta=None,
                                  block_q: int = 256, block_k: int = 512,
                                  interpret: bool = False):
     """Masked-``lengths`` Fig. 5b forward: Q = x @ Wq fused into the
     score kernel AND per-batch-row valid KV prefixes masked in-kernel
     (scalar-prefetched SMEM lengths; KV blocks wholly past
     ``lengths[b]`` skipped).  Causal rows anchor at the end of the
-    valid prefix, as in :func:`fused_attention_masked`.  Forward-only —
-    the KV-cached serving path never differentiates."""
+    valid prefix, as in :func:`fused_attention_masked`.
+
+    ``rope_theta``: when set, the Q tile is additionally rotated
+    in-register at positions ``lengths[b] - sq + r`` — rotary embedding
+    folded between the fused projection and the scores, so RoPE models
+    keep the Fig. 5b schedule.  Forward-only — the KV-cached serving
+    path never differentiates."""
     b, sq, e = x.shape
     eh, hq, d = wq.shape
     assert eh == e
@@ -221,7 +242,8 @@ def fused_qproj_attention_masked(x, wq, k, v, lengths, *,
     )
     o = pl.pallas_call(
         functools.partial(_qproj_masked_fwd_kernel, causal=causal,
-                          scale=scale, hq=hq, sq=sq),
+                          scale=scale, hq=hq, sq=sq,
+                          rope_theta=rope_theta),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dv), x.dtype),
         compiler_params=CompilerParams(
@@ -231,38 +253,53 @@ def fused_qproj_attention_masked(x, wq, k, v, lengths, *,
     return o[:, :sq].reshape(b, hq, sq, dv)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
 def fused_qproj_attention(x, wq, k, v, causal=True, scale=None,
-                          q_offset=None, block_q=256, block_k=512,
-                          interpret=False):
+                          q_offset=None, rope_theta=None, block_q=256,
+                          block_k=512, interpret=False):
     """Fig. 5b schedule: Q = x @ Wq fused into QK^T — Q never stored.
 
     x: (B, Sq, E); wq: (E, Hq, D); k, v: (B, Hkv, Skv, D[v]).
+    ``rope_theta``: rotate the in-VMEM Q tile at positions
+    ``q_offset + r`` before the scores (RoPE fused in-kernel).
     """
     scale_ = scale if scale is not None else wq.shape[-1] ** -0.5
     o, _ = _qproj_fwd(x, wq, k, v, causal=causal, scale=scale_,
-                      q_offset=q_offset, block_q=block_q, block_k=block_k,
+                      q_offset=q_offset, rope_theta=rope_theta,
+                      block_q=block_q, block_k=block_k,
                       interpret=interpret)
     return o
 
 
-def _fqa_fwd(x, wq, k, v, causal, scale, q_offset, block_q, block_k,
-             interpret):
+def _fqa_fwd(x, wq, k, v, causal, scale, q_offset, rope_theta, block_q,
+             block_k, interpret):
     scale_ = scale if scale is not None else wq.shape[-1] ** -0.5
     o, lse = _qproj_fwd(x, wq, k, v, causal=causal, scale=scale_,
-                        q_offset=q_offset, block_q=block_q,
-                        block_k=block_k, interpret=interpret)
+                        q_offset=q_offset, rope_theta=rope_theta,
+                        block_q=block_q, block_k=block_k,
+                        interpret=interpret)
     return o, (x, wq, k, v, o, lse)
 
 
-def _fqa_bwd(causal, scale, q_offset, block_q, block_k, interpret, res, g):
+def _fqa_bwd(causal, scale, q_offset, rope_theta, block_q, block_k,
+             interpret, res, g):
     x, wq, k, v, o, lse = res
     scale_ = scale if scale is not None else wq.shape[-1] ** -0.5
-    # recompute Q (cheap GEMM) and reuse the fused-attention backward
+    # recompute the rotated Q tile (cheap GEMM + rotation) and reuse the
+    # fused-attention backward on it
     q = jnp.einsum("bse,ehd->bhsd", x, wq).astype(x.dtype)
+    positions = None
+    if rope_theta is not None:
+        off = (k.shape[2] - x.shape[1]) if q_offset is None else q_offset
+        positions = off + jnp.arange(x.shape[1], dtype=jnp.int32)
+        q = ref.rope(q, positions, rope_theta)
     dq, dk, dv = fa._bwd((q, k, v, o, lse), g, causal=causal, scale=scale_,
                          q_offset=q_offset, block_q=block_q,
                          block_k=block_k, interpret=interpret)
+    if rope_theta is not None:
+        # rotation is orthogonal: d(unrotated q) = R^T dq = R(-pos) dq
+        dq = ref.rope(dq, -positions, rope_theta)
     dx = jnp.einsum("bhsd,ehd->bse", dq.astype(jnp.float32),
                     wq.astype(jnp.float32)).astype(x.dtype)
     dwq = jnp.einsum("bse,bhsd->ehd", x.astype(jnp.float32),

@@ -9,7 +9,12 @@ runtime:
   ``fused_attention`` path (Fig. 5c Pallas kernel / chunked-XLA
   streaming fallback) or the materialising ``unfused`` reference.
 * ``qproj_attention``  — Fig. 5b/fuse_all path (Q = x @ Wq folded into
-  the score kernel; Q never stored).
+  the score kernel; Q never stored).  RoPE rides along in-kernel: the
+  Q tile is rotated in-register between projection and scores.
+* ``decode_block``     — the M=1 decode megakernel: Q projection
+  (+ RoPE), masked scores, softmax, P.V, output projection AND the
+  residual add in one Pallas launch
+  (``kernels/fused_decode_block.py``).
 * ``schedule_for``     — the legacy shape-driven selector
   (core.fusion.select_schedule), kept for the paper-rule API.
 * ``ssd``/``ssd_step`` — Mamba-2 SSD chunked scan / decode update.
@@ -48,6 +53,8 @@ from repro.kernels import xla_fallback as _xla
 from repro.kernels.fused_attention import fused_attention as _pallas_attn
 from repro.kernels.fused_attention import (
     fused_attention_masked as _pallas_attn_masked)
+from repro.kernels.fused_decode_block import (
+    fused_decode_block as _pallas_decode_block)
 from repro.kernels.fused_qproj_attention import (
     fused_qproj_attention as _pallas_qproj_attn)
 from repro.kernels.fused_qproj_attention import (
@@ -57,8 +64,8 @@ from repro.kernels.xla_fallback import ssd_step  # re-export
 from repro.lower import cache as _plan_cache
 from repro.lower import runtime as _plan_rt
 
-__all__ = ["attention", "qproj_attention", "ssd", "ssd_step",
-           "schedule_for", "default_impl",
+__all__ = ["attention", "qproj_attention", "decode_block", "ssd",
+           "ssd_step", "schedule_for", "default_impl",
            "reset_lengths_downgrade_warning"]
 
 
@@ -256,6 +263,7 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
                     scale: Optional[float] = None,
                     q_offset: Optional[int] = None,
                     lengths: Optional[jax.Array] = None,
+                    rope_theta: Optional[float] = None,
                     impl: str = "auto",
                     block_q: Optional[int] = None,
                     block_k: Optional[int] = None,
@@ -264,7 +272,11 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
     """Layer-fused Q-projection attention (paper Fig. 5b: Q = x @ Wq fused
     into QK^T — Q never stored).  x: (B, Sq, E); wq: (E, Hq, D).
     ``lengths`` takes the masked scalar-prefetch kernel on the Pallas
-    path (see :func:`attention`)."""
+    path (see :func:`attention`).  ``rope_theta`` applies rotary
+    embedding to Q *between* projection and scores — in-register inside
+    the Pallas kernels (row r sits at ``q_offset + r``, or
+    ``lengths[b] - Sq + r`` on the masked path), on the materialised Q
+    in the fallbacks."""
     b, sq, e = x.shape
     hq, d = wq.shape[1], wq.shape[-1]
     skv, hkv = k.shape[2], k.shape[1]
@@ -278,11 +290,17 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
         else:
             return _pallas_qproj_attn_masked(
                 x, wq, k, v, lengths, causal=causal, scale=scale,
-                block_q=block_q, block_k=block_k, interpret=interpret)
+                rope_theta=rope_theta, block_q=block_q, block_k=block_k,
+                interpret=interpret)
     if impl == "pallas":
         return _pallas_qproj_attn(x, wq, k, v, causal, scale, q_offset,
-                                  block_q, block_k, interpret)
+                                  rope_theta, block_q, block_k,
+                                  interpret)
     q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+    if rope_theta is not None:
+        pos = _ref.rope_positions(sq, skv, lengths=lengths,
+                                  q_offset=q_offset)
+        q = _ref.rope(q, pos, rope_theta)
     if impl == "xla":
         return _xla.chunked_attention(
             q, k, v, causal=causal, scale=scale, q_offset=q_offset,
@@ -291,6 +309,58 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
         return _ref.attention_reference(
             q, k, v, causal=causal, scale=scale, q_offset=q_offset,
             lengths=lengths)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def decode_block(x, wq, k, v, wo, residual, lengths, *,
+                 scale: Optional[float] = None,
+                 rope_theta: Optional[float] = None,
+                 impl: str = "auto",
+                 block_k: Optional[int] = None,
+                 interpret: bool = False,
+                 plan: Optional[_plan_rt.PlanDispatch] = None):
+    """The M=1 decode megakernel entry point: the whole attention
+    sub-block — Q projection (+ RoPE at ``lengths[b] - 1``), masked
+    scores over the valid prefix, online softmax, P.V, output
+    projection and residual add — in ONE Pallas launch
+    (``kernels/fused_decode_block.py``).
+
+    x, residual: (B, 1, E); wq: (E, Hq, D); k, v: (B, Hkv, Skv, D[v]);
+    wo: (Hq, Dv, E); lengths: (B,).  Returns (B, 1, E) =
+    ``residual + attn_out @ Wo``.  Non-Pallas impls compose the same
+    math from the streaming-XLA / reference pieces (identical numerics,
+    more HBM round-trips)."""
+    b, sq, e = x.shape
+    assert sq == 1, "decode_block is the M=1 decode schedule"
+    hq, d = wq.shape[1], wq.shape[-1]
+    skv, hkv = k.shape[2], k.shape[1]
+    dv = v.shape[-1]
+    impl, _, block_k, interpret, plan = _resolve(
+        "decode_block", impl, plan, sq, skv, d, hq, hkv, lengths,
+        None, block_k, interpret)
+    if impl == "pallas":
+        reason = _masked_unsupported(x, lengths, False, None, sq)
+        if reason is not None:
+            impl = _downgrade_lengths(plan, reason)
+        else:
+            return _pallas_decode_block(
+                x, wq, k, v, wo, residual, lengths, scale=scale,
+                rope_theta=rope_theta, block_k=block_k,
+                interpret=interpret)
+    if impl == "reference":
+        return _ref.decode_block_reference(
+            x, wq, k, v, wo, residual, lengths, rope_theta=rope_theta,
+            scale=scale)
+    if impl == "xla":
+        q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+        if rope_theta is not None:
+            pos = _ref.rope_positions(sq, skv, lengths=lengths)
+            q = _ref.rope(q, pos, rope_theta)
+        o = _xla.chunked_attention(q, k, v, causal=False, scale=scale,
+                                   lengths=lengths, block_k=block_k)
+        y = jnp.einsum("bhse,hed->bsd", o.astype(jnp.float32),
+                       wo.astype(jnp.float32))
+        return (residual.astype(jnp.float32) + y).astype(x.dtype)
     raise ValueError(f"unknown impl {impl!r}")
 
 

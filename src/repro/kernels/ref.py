@@ -66,6 +66,11 @@ def attention_reference(
         s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
+    if mask is not None:
+        # a row with NO valid column has m == NEG_INF, so exp(s - m)
+        # is 1, not 0 — zero it so such rows emit zeros, matching the
+        # fused kernels and the chunked XLA fallback
+        p = jnp.where(mask, p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30),
                    v.astype(jnp.float32))
@@ -76,17 +81,94 @@ def attention_reference(
     return o
 
 
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding oracle, independent of both the Pallas kernels
+    and ``models.common``: half-split pairs ``(x_i, x_{i+half})`` are
+    rotated by ``positions * theta^(-i/half)`` in fp32.
+
+    x: (..., S, D); positions: (..., S) — head axes are inserted between
+    the batch and sequence dims of ``positions`` to match x's rank.
+    Written against the RoFormer definition so kernel parity tests have
+    a ground truth that shares no code with the implementations under
+    test."""
+    d = x.shape[-1]
+    half = d // 2
+    inv_freq = jnp.float32(theta) ** (
+        -jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    while ang.ndim < x.ndim:
+        ang = jnp.expand_dims(ang, -3)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_positions(sq: int, skv: int,
+                   lengths: Optional[jax.Array] = None,
+                   q_offset: Optional[int] = None) -> jax.Array:
+    """Rotary positions of the Sq query rows under the kernels' causal
+    anchoring: with ``lengths``, rows anchor at the END of each row's
+    valid prefix (row r of batch b sits at ``lengths[b] - sq + r``);
+    without, at ``q_offset + r`` (default ``skv - sq``)."""
+    r = jnp.arange(sq, dtype=jnp.int32)
+    if lengths is not None:
+        return lengths.astype(jnp.int32)[:, None] - sq + r[None, :]
+    off = (skv - sq) if q_offset is None else q_offset
+    return off + r
+
+
 def qproj_attention_reference(
     x: jax.Array,                   # (B, Sq, E) pre-projection activations
     wq: jax.Array,                  # (E, Hq, D)
     k: jax.Array,                   # (B, Hkv, Skv, D)
     v: jax.Array,                   # (B, Hkv, Skv, D)
+    *,
+    rope_theta: Optional[float] = None,
     **kw,
 ):
     """The paper's M<N schedule, unfused oracle: materialise Q = x @ Wq in
-    full (the tensor the fused kernel never stores), then attention."""
+    full (the tensor the fused kernel never stores), apply RoPE between
+    the projection and the scores when ``rope_theta`` is set (the very
+    op that used to force this materialisation), then attention."""
     q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+    if rope_theta is not None:
+        pos = rope_positions(x.shape[1], k.shape[2],
+                             lengths=kw.get("lengths"),
+                             q_offset=kw.get("q_offset"))
+        q = rope(q, pos, rope_theta)
     return attention_reference(q, k, v, **kw)
+
+
+def decode_block_reference(
+    x: jax.Array,                   # (B, 1, E) pre-projection activations
+    wq: jax.Array,                  # (E, Hq, D)
+    k: jax.Array,                   # (B, Hkv, Skv, D)
+    v: jax.Array,                   # (B, Hkv, Skv, Dv)
+    wo: jax.Array,                  # (Hq, Dv, E) output projection
+    residual: jax.Array,            # (B, 1, E)
+    lengths: jax.Array,             # (B,) valid kv prefix per row
+    *,
+    rope_theta: Optional[float] = None,
+    scale: Optional[float] = None,
+):
+    """Unfused oracle of the whole M=1 decode attention sub-block the
+    megakernel folds into one launch: Q projection (+ RoPE at position
+    ``lengths[b] - 1``), masked attention over the valid prefix, output
+    projection, residual add.  At M=1 the end-anchored causal triangle
+    degenerates to the lengths mask itself (``cols < lengths[b]``)."""
+    assert x.shape[1] == 1
+    q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+    if rope_theta is not None:
+        pos = rope_positions(1, k.shape[2], lengths=lengths)
+        q = rope(q, pos, rope_theta)
+    o = attention_reference(q, k, v, causal=False, scale=scale,
+                            lengths=lengths)
+    y = jnp.einsum("bhse,hed->bsd", o.astype(jnp.float32),
+                   wo.astype(jnp.float32))
+    return (residual.astype(jnp.float32) + y).astype(x.dtype)
 
 
 def softmax_reference(x: jax.Array) -> jax.Array:

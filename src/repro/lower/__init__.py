@@ -14,14 +14,15 @@ strings in.  See docs/lowering.md for the IR spec.
 from repro.lower.cache import (bucket_for, clear_plan_cache, kernel_plan,
                                plan_cache_info, resolve_plan)
 from repro.lower.lowering import lower, lower_phase_plan, supported
-from repro.lower.plan import (FUSED_ATTENTION, KERNEL_PATHS,
-                              QPROJ_ATTENTION, UNFUSED, BlockPlan,
-                              Downgrade, ExecutionPlan)
+from repro.lower.plan import (DECODE_MEGAKERNEL, FUSED_ATTENTION,
+                              KERNEL_PATHS, QPROJ_ATTENTION, UNFUSED,
+                              BlockPlan, Downgrade, ExecutionPlan)
 from repro.lower.runtime import (PlanDispatch, ServingPlan, dispatch,
                                  impl_for, serving_plan)
 
 __all__ = [
-    "UNFUSED", "FUSED_ATTENTION", "QPROJ_ATTENTION", "KERNEL_PATHS",
+    "UNFUSED", "FUSED_ATTENTION", "QPROJ_ATTENTION",
+    "DECODE_MEGAKERNEL", "KERNEL_PATHS",
     "BlockPlan", "Downgrade", "ExecutionPlan",
     "lower", "lower_phase_plan", "supported",
     "bucket_for", "resolve_plan", "plan_cache_info", "clear_plan_cache",

@@ -37,7 +37,8 @@ def lower_phase_plan(pp: fusion.PhasePlan, *,
                                   pp.head_dim)
     blocks = tuple(
         BlockPlan.build(i, pp.phase, pp.policy, pp.fuse_q,
-                        pp.fuse_scores, tiling)
+                        pp.fuse_scores, tiling,
+                        fuse_block=getattr(pp, "fuse_block", False))
         for i in range(n_blocks))
     assert len({(b.kernel_path, b.tiling) for b in blocks}) == 1, \
         "identical blocks must lower to identical records"
@@ -53,7 +54,8 @@ def lower_phase_plan(pp: fusion.PhasePlan, *,
 def lower(cfg, phase: str, seq_len: int, *, decode_tokens: int = 1,
           n_blocks: int = 1, bucket: Optional[int] = None,
           fuse_q: Optional[bool] = None,
-          fuse_scores: Optional[bool] = None) -> ExecutionPlan:
+          fuse_scores: Optional[bool] = None,
+          fuse_block: Optional[bool] = None) -> ExecutionPlan:
     """Select (``fusion.phase_schedule``) and lower in one step.
 
     Args:
@@ -64,15 +66,17 @@ def lower(cfg, phase: str, seq_len: int, *, decode_tokens: int = 1,
                    ``decode_tokens`` = M).
         bucket:    the seq/ctx bucket this plan will be cached under
                    (recorded on the plan; defaults to the score width).
-        fuse_q / fuse_scores: override the decision rule (used by the
-                   validation harness to lower counterfactual
-                   schedules — e.g. the LBL baseline for a shape whose
-                   optimum is fused).
+        fuse_q / fuse_scores / fuse_block: override the decision rule
+                   (used by the validation harness to lower
+                   counterfactual schedules — e.g. the LBL baseline, or
+                   the qproj path where the rule would escalate M=1
+                   decode to the megakernel).
     """
     pp = fusion.phase_schedule(cfg, phase, seq_len,
                                decode_tokens=decode_tokens,
                                n_blocks=n_blocks, fuse_q=fuse_q,
-                               fuse_scores=fuse_scores)
+                               fuse_scores=fuse_scores,
+                               fuse_block=fuse_block)
     plan = lower_phase_plan(pp, bucket=bucket)
     # keep the registry name (workload names embed M/C, which would
     # fragment table rows) when the config carries one

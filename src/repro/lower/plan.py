@@ -12,9 +12,9 @@ The ExecutionPlan IR is the bridge: per-block, per-phase records a
 dispatch site can act on without re-deriving the schedule, plus the
 prediction hooks (`predict`) and the honesty ledger (`record_downgrade`,
 `note`) that keep measured-vs-predicted tables truthful when the
-runtime cannot execute the ideal path (e.g. the masked-lengths Pallas
-variant is not implemented, or RoPE/qk-norm between projection and
-scores makes Q-fusion illegal).
+runtime cannot execute the ideal path (e.g. qk-norm between projection
+and scores makes Q-fusion illegal; RoPE no longer does — the fused
+kernels rotate the Q tile in-register).
 
 Pure Python — importable without JAX, like all of ``core/``.
 """
@@ -28,7 +28,8 @@ from repro.core import codesign
 from repro.core import scheduler as sch
 
 __all__ = [
-    "UNFUSED", "FUSED_ATTENTION", "QPROJ_ATTENTION", "KERNEL_PATHS",
+    "UNFUSED", "FUSED_ATTENTION", "QPROJ_ATTENTION",
+    "DECODE_MEGAKERNEL", "KERNEL_PATHS",
     "BlockPlan", "Downgrade", "ExecutionPlan",
 ]
 
@@ -47,14 +48,22 @@ FUSED_ATTENTION = "fused_attention"
 #: pipeline streamed.  Pallas ``fused_qproj_attention``.
 QPROJ_ATTENTION = "qproj_attention"
 
-KERNEL_PATHS = (UNFUSED, FUSED_ATTENTION, QPROJ_ATTENTION)
+#: The fusion ladder's M=1 decode endpoint: Q projection (+ in-kernel
+#: RoPE), scores, softmax, P.V, output projection and residual add in
+#: ONE Pallas launch (``kernels/fused_decode_block.py``) — zero
+#: intermediate HBM round-trips for the whole attention sub-block.
+DECODE_MEGAKERNEL = "decode_megakernel"
+
+KERNEL_PATHS = (UNFUSED, FUSED_ATTENTION, QPROJ_ATTENTION,
+                DECODE_MEGAKERNEL)
 
 #: Generic per-head layer names the stream/materialise record uses
 #: (the ``workload.attention_head`` vocabulary, minus prefixes).
 _HEAD_CHAIN = ("Q", "QKT", "SM", "AV")
 
 
-def kernel_path_for(fuse_q: bool, fuse_scores: bool) -> str:
+def kernel_path_for(fuse_q: bool, fuse_scores: bool,
+                    fuse_block: bool = False) -> str:
     """Map the DSE's per-head fusion flags onto a runtime kernel path.
 
     (fuse_q, fuse_scores) -> path:
@@ -64,20 +73,28 @@ def kernel_path_for(fuse_q: bool, fuse_scores: bool) -> str:
         on the BlockPlan so the gap is visible.
       * (False, True):  ``fused_attention`` (Fig. 5c).
       * (True,  True):  ``qproj_attention`` (Fig. 5b / fuse_all).
+    ``fuse_block`` (which implies both flags) escalates to
+    ``decode_megakernel``.
     """
+    if fuse_block:
+        return DECODE_MEGAKERNEL
     if fuse_scores:
         return QPROJ_ATTENTION if fuse_q else FUSED_ATTENTION
     return UNFUSED
 
 
-def _streaming(fuse_q: bool, fuse_scores: bool
+def _streaming(fuse_q: bool, fuse_scores: bool, fuse_block: bool = False
                ) -> tuple[tuple[tuple[str, str], ...], tuple[str, ...]]:
     """(streamed edges, materialised intermediates) per head."""
     streamed: list[tuple[str, str]] = []
-    if fuse_q:
+    if fuse_q or fuse_block:
         streamed.append(("Q", "QKT"))
-    if fuse_scores:
+    if fuse_scores or fuse_block:
         streamed.extend([("QKT", "SM"), ("SM", "AV")])
+    if fuse_block:
+        # the megakernel also streams the head output through the
+        # output projection and the residual add ("OUT" = resid + y@Wo)
+        streamed.extend([("AV", "PROJ"), ("PROJ", "OUT")])
     producers = {a for a, _ in streamed}
     materialized = tuple(n for n in _HEAD_CHAIN[:-1] if n not in producers)
     return tuple(streamed), materialized
@@ -95,23 +112,29 @@ class BlockPlan:
 
     block_index: int
     phase: str                          # "prefill" | "decode"
-    policy: str                         # lbl|fuse_q_qkt|fuse_pv|fuse_all
+    policy: str                         # lbl|fuse_q_qkt|fuse_pv|
+    #                                     fuse_all|megakernel
     kernel_path: str                    # one of KERNEL_PATHS
     fuse_q: bool
     fuse_scores: bool
     tiling: codesign.AttentionTiling    # plan-resolved (block_q, block_kv)
     streamed: tuple[tuple[str, str], ...]
     materialized: tuple[str, ...]       # intermediates that hit memory
+    fuse_block: bool = False            # decode megakernel
 
     @classmethod
     def build(cls, block_index: int, phase: str, policy: str,
               fuse_q: bool, fuse_scores: bool,
-              tiling: codesign.AttentionTiling) -> "BlockPlan":
-        streamed, materialized = _streaming(fuse_q, fuse_scores)
+              tiling: codesign.AttentionTiling,
+              fuse_block: bool = False) -> "BlockPlan":
+        streamed, materialized = _streaming(fuse_q, fuse_scores,
+                                            fuse_block)
         return cls(block_index=block_index, phase=phase, policy=policy,
-                   kernel_path=kernel_path_for(fuse_q, fuse_scores),
+                   kernel_path=kernel_path_for(fuse_q, fuse_scores,
+                                               fuse_block),
                    fuse_q=fuse_q, fuse_scores=fuse_scores, tiling=tiling,
-                   streamed=streamed, materialized=materialized)
+                   streamed=streamed, materialized=materialized,
+                   fuse_block=fuse_block)
 
 
 @dataclasses.dataclass

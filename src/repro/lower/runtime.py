@@ -6,10 +6,11 @@ Two layers:
 
 * :func:`dispatch` — legalise one plan for one call site: map the
   kernel path onto an ``ops`` impl string for the backend, downgrade
-  paths the runtime cannot execute (Q-projection fusion under
-  RoPE/qk-norm; the masked-lengths Pallas variant), and record every
-  deviation on the plan so validation tables label measured numbers
-  with the path actually run.
+  paths the runtime cannot execute (Q-projection fusion under qk-norm,
+  megakernel without Wo/residual at the call site — RoPE no longer
+  blocks anything: the fused kernels rotate the Q tile in-register),
+  and record every deviation on the plan so validation tables label
+  measured numbers with the path actually run.
 * :class:`ServingPlan` — the serving engine's handle: holds the
   config, resolves the prefill plan once and the decode plan per
   context *bucket* (``lower.cache``), logging each re-resolution.  The
@@ -29,8 +30,8 @@ from typing import Optional
 
 from repro.lower import cache as plan_cache
 from repro.lower import lowering
-from repro.lower.plan import (FUSED_ATTENTION, QPROJ_ATTENTION, UNFUSED,
-                              ExecutionPlan)
+from repro.lower.plan import (DECODE_MEGAKERNEL, FUSED_ATTENTION,
+                              QPROJ_ATTENTION, UNFUSED, ExecutionPlan)
 
 __all__ = ["PlanDispatch", "dispatch", "impl_for", "ServingPlan",
            "serving_plan"]
@@ -62,7 +63,15 @@ class PlanDispatch:
 
     @property
     def fuse_q(self) -> bool:
-        return self.path == QPROJ_ATTENTION
+        """The call site should hand the kernel pre-projection
+        activations + Wq instead of a materialised Q."""
+        return self.path in (QPROJ_ATTENTION, DECODE_MEGAKERNEL)
+
+    @property
+    def fuse_wo(self) -> bool:
+        """The call site should also hand over Wo and the residual —
+        the whole decode attention sub-block runs as one launch."""
+        return self.path == DECODE_MEGAKERNEL
 
     def __repr__(self) -> str:
         return (f"<PlanDispatch {self.path}/{self.impl} "
@@ -76,33 +85,61 @@ def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
     """Legalise ``plan`` for one call site.
 
     Args:
-        entry:   "attention" (Q given — the model runtime) or
-                 "qproj_attention" (x and Wq given — the raw-kernel
-                 harness).  Q-projection fusion needs the latter.
+        entry:   what the call site can hand the kernel —
+                 "attention" (a materialised Q: the pre-megakernel
+                 model runtime), "qproj_attention" (pre-projection x
+                 and Wq: Q-fusion legal), or "decode_block" (x, Wq,
+                 Wo AND the residual: the decode megakernel's whole
+                 sub-block).  Deeper fusion needs richer entries.
         rope / qk_norm: transformations applied between the Q
-                 projection and the scores; either breaks Q-fusion.
+                 projection and the scores.  RoPE is *fused
+                 in-kernel* (the Q tile is rotated in-register) and
+                 no longer blocks anything; qk-norm still breaks
+                 Q-fusion (a data-dependent normalisation the kernel
+                 does not fold).
         lengths_masked: the call carries a ``lengths`` mask (decode /
                  chunked prefill over a partially-filled cache).
                  Masked decode is **legal Pallas**: the scalar-prefetch
                  masked kernels (``fused_attention_masked`` /
-                 ``fused_qproj_attention_masked``) mask score tiles
-                 in-kernel and skip KV blocks past each row's valid
-                 prefix, so fused paths keep their planned impl — a
-                 note is left on the plan, never a downgrade.
+                 ``fused_qproj_attention_masked`` /
+                 ``fused_decode_block``) mask score tiles in-kernel
+                 and skip KV blocks past each row's valid prefix, so
+                 fused paths keep their planned impl — a note is left
+                 on the plan, never a downgrade.
     """
     path = plan.kernel_path
+    if path == DECODE_MEGAKERNEL:
+        blocked = []
+        if entry != "decode_block":
+            blocked.append("Wo/residual not available at this call site")
+        if qk_norm:
+            blocked.append("qk-norm between projection and scores")
+        if blocked:
+            # fall down the ladder: Q-fusion survives when the call
+            # site still hands over x/Wq and nothing but RoPE sits
+            # between projection and scores
+            if entry in ("qproj_attention", "decode_block") \
+                    and not qk_norm:
+                new = QPROJ_ATTENTION
+            elif plan.block(0).fuse_scores:
+                new = FUSED_ATTENTION
+            else:
+                new = UNFUSED
+            plan.record_downgrade("; ".join(blocked), path, new)
+            path = new
     if path == QPROJ_ATTENTION:
         blocked = []
-        if entry != "qproj_attention":
+        if entry not in ("qproj_attention", "decode_block"):
             blocked.append("Q already materialised at this call site")
-        if rope:
-            blocked.append("RoPE between projection and scores")
         if qk_norm:
             blocked.append("qk-norm between projection and scores")
         if blocked:
             new = FUSED_ATTENTION if plan.block(0).fuse_scores else UNFUSED
             plan.record_downgrade("; ".join(blocked), path, new)
             path = new
+    if rope and path in (QPROJ_ATTENTION, DECODE_MEGAKERNEL):
+        plan.note("RoPE fused in-kernel: Q tile rotated in-register "
+                  "between projection and scores")
     impl = impl_for(path, backend, interpret)
     if lengths_masked and impl == "pallas":
         plan.note("masked-lengths calls take the scalar-prefetch "
@@ -148,8 +185,16 @@ class ServingPlan:
         plan = plan_cache.resolve_plan(self.cfg, phase, n,
                                        decode_tokens=decode_tokens,
                                        n_blocks=self.n_blocks)
+        # the model runtime (models/attention.py) hands the kernel
+        # whatever the deepest decode fusion needs: pre-projection
+        # activations + Wq always, and Wo + the residual on M=1 decode
+        # steps — so the planned ladder rung is executable end-to-end
+        entry = "attention"
+        if phase == "decode":
+            entry = "decode_block" if decode_tokens == 1 \
+                else "qproj_attention"
         d = dispatch(plan, backend=self.backend, interpret=self.interpret,
-                     entry="attention",
+                     entry=entry,
                      rope=getattr(self.cfg, "rope_theta", 0) > 0,
                      qk_norm=getattr(self.cfg, "qk_norm", False),
                      lengths_masked=True)

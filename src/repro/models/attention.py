@@ -7,7 +7,10 @@ Schedule selection (the paper's contribution as a runtime feature):
     (ops.attention), score matrix never materialised;
   * decode:        M = 1 << N              -> Fig. 5b regime; the Q
     projection folds into the kernel (ops.qproj_attention) so Q never
-    hits HBM.  Q-fusion is only legal without RoPE/qk-norm between
+    hits HBM — RoPE rides along in-register — and at M = 1 the whole
+    sub-block escalates to the decode megakernel (ops.decode_block):
+    projection, scores, softmax, P.V, output projection and residual
+    add in one launch.  Q-fusion is only legal without qk-norm between
     projection and scores; the lowering layer records the downgrade.
 
 The decision reaches this module two ways: ``impl="auto"`` resolves an
@@ -78,15 +81,32 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
                 interpret: bool = False,
-                plan=None):
+                plan=None,
+                residual: Optional[jax.Array] = None):
     """x: (B, S, D).  With cache: append k/v at cache_len, attend over
     the valid prefix (decode / chunked prefill).  ``plan``: a resolved
     ``lower.runtime.PlanDispatch`` routing this block through its
-    DSE-assigned kernel path."""
+    DSE-assigned kernel path — ``plan.fuse_q`` skips the host Q
+    projection (the kernel builds and RoPE-rotates the Q tile itself),
+    ``plan.fuse_wo`` escalates the M=1 step to the decode megakernel.
+    ``residual``: the block's skip input; when given, the returned
+    output already includes it (the megakernel folds the add into the
+    launch; other paths add it here), so the caller must not add it
+    again."""
     dt = x.dtype
     b, s, _ = x.shape
     decode = cache is not None
     impl, bq, bk, interpret = _plan_kernel_args(cfg, plan, interpret)
+    from repro.sharding import rules as _shrules
+    dist = decode and cfg.distributed_decode and s == 1 \
+        and _shrules._current()[0] is not None
+    # Q-fusion: the kernel projects (and rotates) Q from x itself, so
+    # Q never exists host-side.  Legal only without qk-norm (a
+    # data-dependent transform between projection and scores the
+    # kernel does not fold) — dispatch legalisation already downgrades
+    # such plans; this guard refuses hand-built inconsistent ones.
+    fuse_q = decode and not dist and plan is not None \
+        and getattr(plan, "fuse_q", False) and not cfg.qk_norm
 
     def project_kv():
         k = jnp.einsum("bsd,dhe->bhse", x, params["wk"].astype(dt))
@@ -100,11 +120,12 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
     k_new = constrain(k_new, "batch", "kv_heads", "seq", "head_dim")
     v_new = constrain(v_new, "batch", "kv_heads", "seq", "head_dim")
 
-    q = jnp.einsum("bsd,dhe->bhse", x, params["wq"].astype(dt))
-    if cfg.qk_norm:
-        q = rms_norm(q, params["q_norm"])
-    q = rope(q, positions, cfg.rope_theta)
-    q = constrain(q, "batch", "heads", "seq", "head_dim")
+    if not fuse_q:
+        q = jnp.einsum("bsd,dhe->bhse", x, params["wq"].astype(dt))
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"])
+        q = rope(q, positions, cfg.rope_theta)
+        q = constrain(q, "batch", "heads", "seq", "head_dim")
 
     if decode:
         # write new kv at cache_len (same position for all rows)
@@ -116,14 +137,30 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
             (0, 0, cache_len, 0))
         new_cache = {"k": k_buf, "v": v_buf}
         lengths = jnp.full((b,), cache_len + s, jnp.int32)
-        from repro.sharding import rules as _shrules
-        if cfg.distributed_decode and s == 1 \
-                and _shrules._current()[0] is not None:
+        if dist:
             from repro.serve.distributed_decode import \
                 distributed_decode_attention
             o = distributed_decode_attention(
                 q, k_buf.astype(dt), v_buf.astype(dt), lengths,
                 plan=plan)
+        elif fuse_q:
+            # in-kernel rotary position of row r is lengths - s + r =
+            # cache_len + r — exactly this module's `positions`
+            theta = float(cfg.rope_theta) if cfg.rope_theta else None
+            wq = params["wq"].astype(dt)
+            if getattr(plan, "fuse_wo", False) and s == 1 \
+                    and residual is not None:
+                out = ops.decode_block(
+                    x, wq, k_buf.astype(dt), v_buf.astype(dt),
+                    params["wo"].astype(dt), residual, lengths,
+                    rope_theta=theta, impl=impl, block_k=bk,
+                    interpret=interpret, plan=plan)
+                return out, new_cache
+            o = ops.qproj_attention(
+                x, wq, k_buf.astype(dt), v_buf.astype(dt),
+                causal=cfg.causal, q_offset=cache_len, lengths=lengths,
+                rope_theta=theta, impl=impl, block_q=bq, block_k=bk,
+                interpret=interpret, plan=plan)
         else:
             o = ops.attention(q, k_buf.astype(dt), v_buf.astype(dt),
                               causal=cfg.causal, q_offset=cache_len,
@@ -137,6 +174,8 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                           interpret=interpret, plan=plan)
     o = constrain(o, "batch", "heads", "seq", "head_dim")
     out = jnp.einsum("bhse,hed->bsd", o, params["wo"].astype(dt))
+    if residual is not None:
+        out = residual + out
     return out, new_cache
 
 
@@ -197,12 +236,15 @@ def mla_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
                 interpret: bool = False,
-                plan=None):
+                plan=None,
+                residual: Optional[jax.Array] = None):
     """Prefill/train: non-absorbed (per-head K/V, fused kernel, causal).
     Decode: absorbed MQA form over the latent cache (d_k = r_kv + rope,
     d_v = r_kv) — one shared latent 'kv head'.  MLA blocks are not
     lowerable to DSE workloads yet, so ``plan`` only overrides the
-    kernel args when a caller resolved one by hand."""
+    kernel args when a caller resolved one by hand.  ``residual`` is
+    folded into the returned output (same contract as
+    :func:`gqa_forward`; no megakernel path here)."""
     dt = x.dtype
     b, s, _ = x.shape
     impl, bq, bk, interpret = _plan_kernel_args(cfg, plan, interpret)
@@ -245,6 +287,8 @@ def mla_forward(params, cfg: ModelConfig, x, positions, *,
         o = jnp.einsum("bhsr,rhe->bhse", o_lat, params["wv_b"].astype(dt))
 
     out = jnp.einsum("bhse,hed->bsd", o, params["wo"].astype(dt))
+    if residual is not None:
+        out = residual + out
     return out, new_cache
 
 

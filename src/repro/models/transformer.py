@@ -107,10 +107,14 @@ def _layer_forward(lp, cfg: ModelConfig, i_kind: tuple, x, positions,
     aux = {}
     h = rms_norm(x, lp["pre_norm"])
     if block_kind == "attn":
-        h, new_attn_cache = attn.attention_forward(
+        # the attention block owns its residual add (residual=x): the
+        # decode megakernel folds it into the Pallas launch, every
+        # other path adds it inside attention_forward
+        x, new_attn_cache = attn.attention_forward(
             lp["attn"], cfg, h, positions,
             cache=None if layer_cache is None else layer_cache.get("attn"),
-            cache_len=cache_len, interpret=interpret, plan=plan)
+            cache_len=cache_len, interpret=interpret, plan=plan,
+            residual=x)
         new_cache = None if layer_cache is None else {"attn": new_attn_cache}
     else:
         h, new_mamba_cache = mb.mamba_forward(
@@ -119,7 +123,7 @@ def _layer_forward(lp, cfg: ModelConfig, i_kind: tuple, x, positions,
             interpret=interpret)
         new_cache = None if layer_cache is None \
             else {"mamba": new_mamba_cache}
-    x = x + h
+        x = x + h
     if "mlp" in lp or "moe" in lp:
         h = rms_norm(x, lp["ffn_norm"])
         if ffn_kind == "moe" and "moe" in lp:

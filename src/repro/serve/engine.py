@@ -12,6 +12,13 @@ kernel path — when the KV context crosses a bucket edge; the first
 edge is the crossover itself.  Without a plan the config-driven
 dispatch is unchanged.
 
+Past the crossover, M=1 decode climbs the whole fusion ladder:
+``decode_megakernel`` (Q projection + in-kernel RoPE, scores, softmax,
+P.V, output projection and the residual add in one Pallas launch) for
+RoPE-only configs, ``qproj_attention`` when the step has multiple rows
+(chunked prefill), ``fused_attention`` when qk-norm keeps Q-fusion
+illegal — the downgrade recorded on the plan, never silent.
+
 Every KV-cached step (decode and each chunked-prefill chunk) carries a
 ``lengths`` mask and stays on the planned Pallas path: the masked
 scalar-prefetch kernels mask score tiles in-kernel, so the resolved
@@ -136,6 +143,9 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
     the context the scores will span (cache prefix + the new token) —
     the kernel path switches the step the context crosses
     ``plan.crossover_ctx`` (= 2N, the analytical alpha_kv crossover).
+    Beyond it, a RoPE-only config runs the decode megakernel: the whole
+    attention sub-block (projection + RoPE through the residual add) is
+    one Pallas launch per block.
     """
     dispatch = None
     if plan is not None:

@@ -94,13 +94,13 @@ def test_qproj_fusion_forward_and_grads():
     wq = jax.random.normal(ks[1], (192, 4, 64)) * 0.05
     k = jax.random.normal(ks[2], (2, 2, 256, 64))
     v = jax.random.normal(ks[3], (2, 2, 256, 64))
-    o = fused_qproj_attention(x, wq, k, v, True, None, None, 64, 128,
-                              True)
+    o = fused_qproj_attention(x, wq, k, v, True, None, None, None, 64,
+                              128, True)
     o_ref = ref.qproj_attention_reference(x, wq, k, v, causal=True)
     np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
 
     g1 = jax.grad(lambda *A: (fused_qproj_attention(
-        *A, True, None, None, 64, 128, True) ** 2).sum(),
+        *A, True, None, None, None, 64, 128, True) ** 2).sum(),
         argnums=(0, 1, 2, 3))(x, wq, k, v)
     g2 = jax.grad(lambda *A: (ref.qproj_attention_reference(
         *A, causal=True) ** 2).sum(), argnums=(0, 1, 2, 3))(x, wq, k, v)

@@ -59,6 +59,8 @@ def test_kernel_path_mapping():
     assert kernel_path_for(True, False) == lower.UNFUSED
     assert kernel_path_for(False, True) == lower.FUSED_ATTENTION
     assert kernel_path_for(True, True) == lower.QPROJ_ATTENTION
+    assert kernel_path_for(True, True, fuse_block=True) == \
+        lower.DECODE_MEGAKERNEL
 
 
 def test_bucket_edges_pin_the_decode_crossover():
@@ -81,10 +83,18 @@ def test_lowered_blocks_are_homogeneous_and_per_block():
     assert {b.kernel_path for b in plan.blocks} == {plan.kernel_path}
     assert [b.block_index for b in plan.blocks] == [0, 1, 2]
     assert plan.crossover_ctx == 64
-    assert plan.kernel_path == lower.QPROJ_ATTENTION   # fuse_all regime
+    # M=1 decode past the crossover escalates all the way: the whole
+    # attention sub-block (projection + RoPE .. residual) one launch
+    assert plan.kernel_path == lower.DECODE_MEGAKERNEL
     assert plan.block(0).streamed == (("Q", "QKT"), ("QKT", "SM"),
-                                      ("SM", "AV"))
+                                      ("SM", "AV"), ("AV", "PROJ"),
+                                      ("PROJ", "OUT"))
     assert plan.block(0).materialized == ()
+    # the qproj rung is still lowerable as a counterfactual override
+    qp = lower.lower(toy_cfg(), "decode", 256, fuse_block=False)
+    assert qp.kernel_path == lower.QPROJ_ATTENTION
+    assert qp.block(0).streamed == (("Q", "QKT"), ("QKT", "SM"),
+                                    ("SM", "AV"))
 
 
 def test_decode_path_flips_at_crossover_in_the_ir():
@@ -97,8 +107,12 @@ def test_decode_path_flips_at_crossover_in_the_ir():
     # folds into UNFUSED while the IR keeps the flag visible
     assert below.block(0).fuse_q and not below.block(0).fuse_scores
     assert below.block(0).materialized == ("QKT", "SM")
-    assert above.kernel_path == lower.QPROJ_ATTENTION
+    assert above.kernel_path == lower.DECODE_MEGAKERNEL
     assert above.alpha < 1.0 == below.alpha
+    # multi-row decode (chunked prefill) stays on the qproj rung:
+    # the megakernel is the M=1 schedule
+    rows = lower.lower(cfg, "decode", 65, decode_tokens=4)
+    assert rows.kernel_path == lower.QPROJ_ATTENTION
 
 
 def test_prefill_path_follows_m_vs_n():
@@ -118,16 +132,47 @@ def test_plan_resolved_tiling():
 
 def test_dispatch_legalises_qproj_and_records():
     plan = lower.lower(toy_cfg(qk_norm=True), "decode", 256)
-    assert plan.kernel_path == lower.QPROJ_ATTENTION
+    assert plan.kernel_path == lower.DECODE_MEGAKERNEL
     d = lower.dispatch(plan, backend="cpu", rope=True, qk_norm=True,
                        lengths_masked=False)
     assert d.path == lower.FUSED_ATTENTION and d.impl == "xla"
     assert len(plan.downgrades) == 1
-    assert "RoPE" in plan.downgrades[0].reason
+    # qk-norm is what breaks Q-fusion now; RoPE is fused in-kernel and
+    # must never appear as a downgrade reason
+    assert "qk-norm" in plan.downgrades[0].reason
+    assert "RoPE" not in plan.downgrades[0].reason
     # dedup: same deviation again only bumps the count
     lower.dispatch(plan, backend="cpu", rope=True, qk_norm=True)
     assert len(plan.downgrades) == 1 and plan.downgrades[0].count == 2
     assert "downgrade" in plan.describe()
+
+
+def test_dispatch_rope_is_a_note_not_a_downgrade():
+    """RoPE between projection and scores no longer blocks Q-fusion:
+    the fused kernels rotate the Q tile in-register, so a RoPE-only
+    plan keeps its planned path with an empty ledger."""
+    plan = lower.lower(toy_cfg(), "decode", 256)
+    d = lower.dispatch(plan, backend="tpu", entry="decode_block",
+                       rope=True)
+    assert d.path == lower.DECODE_MEGAKERNEL and d.impl == "pallas"
+    assert d.fuse_q and d.fuse_wo
+    assert not plan.downgrades
+    assert any("RoPE fused in-kernel" in n for n in plan.notes)
+
+
+def test_dispatch_megakernel_ladder():
+    """Each missing capability steps the megakernel down exactly one
+    rung: a call site without Wo/residual -> qproj_attention; qk-norm
+    on top -> fused_attention."""
+    plan = lower.lower(toy_cfg(), "decode", 256)
+    d = lower.dispatch(plan, backend="tpu", entry="qproj_attention",
+                       rope=True)
+    assert d.path == lower.QPROJ_ATTENTION
+    assert d.fuse_q and not d.fuse_wo
+    assert plan.downgrades[-1].to_path == lower.QPROJ_ATTENTION
+    assert "Wo/residual" in plan.downgrades[-1].reason
+    d2 = lower.dispatch(plan, backend="tpu", entry="attention")
+    assert d2.path == lower.FUSED_ATTENTION and not d2.fuse_q
 
 
 def test_dispatch_masked_lengths_stays_pallas():
@@ -135,9 +180,9 @@ def test_dispatch_masked_lengths_stays_pallas():
     kernels): fused paths keep their planned impl, the plan gets a
     note, and the downgrade ledger stays empty."""
     plan = lower.lower(toy_cfg(), "decode", 256)
-    d = lower.dispatch(plan, backend="tpu", entry="qproj_attention",
+    d = lower.dispatch(plan, backend="tpu", entry="decode_block",
                        lengths_masked=True)
-    assert d.path == lower.QPROJ_ATTENTION and d.impl == "pallas"
+    assert d.path == lower.DECODE_MEGAKERNEL and d.impl == "pallas"
     assert not plan.downgrades
     assert any("masked-lengths" in n for n in plan.notes)
 
@@ -349,25 +394,39 @@ def test_serve_plan_end_to_end_equivalence_and_crossover(arch):
     for a, b in zip(ref_toks, toks):
         np.testing.assert_array_equal(a, b)
 
-    # (b) the kernel path switched exactly at the crossover
+    # (b) the kernel path switched exactly at the crossover, and the
+    # above-crossover rung is arch-dependent: RoPE-only starcoder2
+    # climbs to the decode megakernel (RoPE is fused in-kernel);
+    # qwen3's qk-norm legitimately pins it to fused_attention
+    fused = lower.FUSED_ATTENTION if cfg.qk_norm \
+        else lower.DECODE_MEGAKERNEL
     decode_res = [r for r in plan.resolutions if r[0] == "decode"]
     assert len(decode_res) == steps
     paths = {ctx: path for (_, ctx, _, path, _) in decode_res}
     for ctx, path in paths.items():
-        want = lower.UNFUSED if ctx <= crossover else \
-            lower.FUSED_ATTENTION
+        want = lower.UNFUSED if ctx <= crossover else fused
         assert path == want, (ctx, path)
     assert lower.UNFUSED in paths.values()
-    assert lower.FUSED_ATTENTION in paths.values()
+    assert fused in paths.values()
 
     # acceptance: the fused decode steps really executed Pallas (the
-    # masked scalar-prefetch kernel) — ZERO lengths downgrades; the
-    # resolved kernel path is the path that ran
-    fused_steps = [r for r in decode_res
-                   if r[3] == lower.FUSED_ATTENTION]
+    # masked scalar-prefetch kernels / the megakernel) — ZERO lengths
+    # downgrades; the resolved kernel path is the path that ran
+    fused_steps = [r for r in decode_res if r[3] == fused]
     assert fused_steps and all(r[4] == "pallas" for r in fused_steps)
     above = lower.resolve_plan(cfg, "decode", crossover + 1,
                                n_blocks=cfg.n_layers)
+    if cfg.qk_norm:
+        # the only ledger entry is the qk-norm rung-down — never RoPE,
+        # never masked lengths
+        assert above.downgrades
+        assert all("qk-norm" in g.reason and "RoPE" not in g.reason
+                   for g in above.downgrades), above.downgrades
+    else:
+        # RoPE-bearing config on the Q-fused megakernel path with an
+        # EMPTY downgrade ledger (tentpole acceptance)
+        assert not above.downgrades, above.downgrades
+        assert any("RoPE fused in-kernel" in n for n in above.notes)
     assert not any("masked-lengths" in g.reason
                    for g in above.downgrades), above.downgrades
     assert any("masked-lengths" in n for n in above.notes)

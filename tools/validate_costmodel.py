@@ -21,8 +21,14 @@ Decode cells are additionally run in the *serving regime* — a
 ``lengths`` mask over a KV cache — which now executes the masked
 scalar-prefetch Pallas kernels on the Pallas path: the
 ``dse+lengths`` rows carry a ``lengths_downgrades`` count that must
-be 0 (the planned kernel path is the executed path).  Downgrades
-recorded on the plans (Q-fusion legality, residual masked-lengths
+be 0 (the planned kernel path is the executed path).  A second
+serving-regime row per decode cell, ``megakernel``, forces the
+``fuse_block`` counterfactual through the ``decode_block`` entry with
+RoPE on — the one-launch decode sub-block (projection + RoPE + masked
+attention + output projection + residual) against the composed
+pipeline it replaces; qk-norm configs downgrade honestly and the row
+labels whatever path actually ran.  Downgrades recorded on the plans
+(qk-norm Q-fusion legality, entry rung-downs, residual masked-lengths
 dtype gates) are printed with the table, so a measured number is
 never attributed to a path that did not run.
 
@@ -67,7 +73,9 @@ def _inputs(cfg, phase: str, n: int, key=None):
     """(x, wq, k, v, q_offset): the attention pipeline's inputs for one
     cell — M rows of new input vs an n-deep (self or cached) score
     width.  No RoPE/qk-norm, so every candidate path (including
-    Q-projection fusion) is legal and the race is schedules-only."""
+    Q-projection fusion) is legal and the race is schedules-only;
+    the serving-regime ``megakernel`` cell builds its own RoPE-on
+    inputs."""
     hq, hkv, d, e = _dims(cfg)
     key = key if key is not None else jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
@@ -124,6 +132,82 @@ def _masked_cell(cfg, arch: str, n: int, jax_backend: str,
         "predicted_cycles": round(pred.latency_cycles),
         "predicted_peak_words": pred.peak_active_words,
         "measured_us": round(us, 1),
+        "downgrades": [f"{g.from_path}->{g.to_path}: {g.reason}"
+                       for g in plan.downgrades],
+        "lengths_downgrades": sum(
+            g.count for g in plan.downgrades
+            if "masked-lengths" in g.reason),
+    }
+
+
+def _megakernel_cell(cfg, arch: str, n: int, jax_backend: str,
+                     interpret: bool, repeats: int) -> dict:
+    """The one-launch decode sub-block cell: the ``fuse_block``
+    counterfactual lowered and dispatched through the ``decode_block``
+    entry (the call site hands x, Wq, Wo AND the residual), RoPE on —
+    the zoo regime the megakernel was built for.  On RoPE-only configs
+    the dispatched path is ``decode_megakernel`` with an empty ledger;
+    qk-norm configs rung down honestly and the row labels the path
+    that actually ran.  The composed pipeline (qproj + output
+    projection + residual add, same end-to-end math) is timed next to
+    it so the row is a like-for-like launch-count comparison."""
+    hq, hkv, d_h, e = _dims(cfg)
+    plan = lower.lower(cfg, "decode", n, fuse_q=True, fuse_scores=True,
+                       fuse_block=True, bucket=n)
+    disp = lower.dispatch(plan, backend=jax_backend, interpret=interpret,
+                          entry="decode_block",
+                          rope=bool(cfg.rope_theta),
+                          qk_norm=cfg.qk_norm, lengths_masked=True)
+    x, wq, k, v, _ = _inputs(cfg, "decode", n)
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    wo = jax.random.normal(ks[0], (hq, d_h, e), jnp.float32) \
+        / (hq * d_h) ** 0.5
+    res = jax.random.normal(ks[1], x.shape, jnp.float32)
+    lens = jnp.full((x.shape[0],), n, jnp.int32)
+    theta = float(cfg.rope_theta) if cfg.rope_theta else None
+
+    if disp.path == lower.DECODE_MEGAKERNEL:
+        def fn(x, wq, k, v):
+            return ops.decode_block(x, wq, k, v, wo, res, lens,
+                                    rope_theta=theta, plan=disp,
+                                    interpret=disp.interpret)
+    else:   # rung down (qk-norm): time the path that actually runs
+        def fn(x, wq, k, v):
+            q = jnp.einsum("bse,ehd->bhsd", x, wq)
+            if theta is not None:
+                from repro.kernels import ref as _ref
+                q = _ref.rope(q, _ref.rope_positions(1, n, lengths=lens),
+                              theta)
+            o = ops.attention(q, k, v, causal=False, lengths=lens,
+                              plan=disp, interpret=disp.interpret)
+            return res + jnp.einsum(
+                "bhse,hed->bsd", o.astype(jnp.float32),
+                wo.astype(jnp.float32)).astype(x.dtype)
+
+    def composed(x, wq, k, v):
+        q = jnp.einsum("bse,ehd->bhsd", x, wq)
+        if theta is not None:
+            from repro.kernels import ref as _ref
+            q = _ref.rope(q, _ref.rope_positions(1, n, lengths=lens),
+                          theta)
+        o = ops.attention(q, k, v, causal=False, lengths=lens,
+                          impl="reference")
+        return res + jnp.einsum(
+            "bhse,hed->bsd", o.astype(jnp.float32),
+            wo.astype(jnp.float32)).astype(x.dtype)
+
+    us = _measure_us(fn, (x, wq, k, v), repeats)
+    us_composed = _measure_us(composed, (x, wq, k, v), repeats)
+    pred = plan.predict()
+    return {
+        "name": f"{arch}_decode{n}_megakernel",
+        "kind": "run", "arch": arch, "phase": "decode", "n": n,
+        "schedule": "megakernel", "policy": plan.block(0).policy,
+        "path": disp.path, "impl": disp.impl,
+        "predicted_cycles": round(pred.latency_cycles),
+        "predicted_peak_words": pred.peak_active_words,
+        "measured_us": round(us, 1),
+        "measured_us_composed": round(us_composed, 1),
         "downgrades": [f"{g.from_path}->{g.to_path}: {g.reason}"
                        for g in plan.downgrades],
         "lengths_downgrades": sum(
@@ -190,7 +274,8 @@ def validate(archs=("qwen3-8b", "starcoder2-7b"), *, smoke: bool = True,
                     d = lower.dispatch(
                         plan, backend=jax_backend, interpret=interpret,
                         entry="qproj_attention"
-                        if plan.kernel_path == lower.QPROJ_ATTENTION
+                        if plan.kernel_path in (lower.QPROJ_ATTENTION,
+                                                lower.DECODE_MEGAKERNEL)
                         else "attention")
                     x, wq, k, v, q_off = _inputs(cfg, phase, n)
                     fn = _candidate_fn(d, causal=True, q_offset=q_off)
@@ -214,6 +299,8 @@ def validate(archs=("qwen3-8b", "starcoder2-7b"), *, smoke: bool = True,
                     by_schedule.setdefault(label, []).append(row)
                 if phase == "decode":
                     rows.append(_masked_cell(
+                        cfg, arch, n, jax_backend, interpret, repeats))
+                    rows.append(_megakernel_cell(
                         cfg, arch, n, jax_backend, interpret, repeats))
                 frac, pairs = _concordance(
                     [(r["predicted_cycles"], r["measured_us"])
