@@ -31,13 +31,15 @@ MODULES = {
     "blocks_bench": "benchmarks.blocks_bench",
     "phase_sweep": "benchmarks.phase_sweep",
     "lowering_bench": "benchmarks.lowering_bench",
+    "serving_bench": "benchmarks.serving_bench",
     "kernel_bench": "benchmarks.kernel_bench",
     "roofline": "benchmarks.roofline",
 }
 
 # module name -> JSON artifact area (default: the module name itself)
 AREAS = {"kernel_bench": "kernels", "engine_bench": "engine",
-         "blocks_bench": "blocks", "lowering_bench": "lowering"}
+         "blocks_bench": "blocks", "lowering_bench": "lowering",
+         "serving_bench": "serving"}
 
 
 def main(argv=None) -> None:

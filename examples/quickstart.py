@@ -32,6 +32,37 @@ def explore(M, N):
           f"(A_LF={analytical.a_lf(M, N)})")
 
 
+def continuous_batching():
+    """Serve a small request stream through the continuous-batching
+    engine (docs/serving.md keeps this snippet verbatim —
+    tools/check_snippets.py enforces it)."""
+    print("\n=== continuous batching: admission -> insert -> decode ===")
+    from repro import configs
+    from repro.models import init_params_and_axes
+    cfg = configs.get_config("qwen3-8b", smoke=True)
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [5, 3, 5, 8, 9, 7]]
+
+    from repro.serve import (ContinuousBatchingEngine, Request,
+                             RequestBatcher, make_serving_plan)
+
+    plan = make_serving_plan(cfg, max_len=64)
+    engine = ContinuousBatchingEngine(params, cfg, batch_size=2,
+                                      max_len=64, plan=plan,
+                                      prefill_chunk=16)
+    batcher = RequestBatcher(batch_size=2, eos_id=-1, max_len=64,
+                             max_concurrency=2)
+    for uid, prompt in enumerate(prompts):
+        batcher.submit(Request(uid=uid, prompt=prompt, max_new_tokens=4))
+    finished = batcher.serve(engine, max_steps=64)
+
+    for r in finished:
+        print(f"  request {r.uid}: {len(r.prompt)} prompt tokens -> "
+              f"generated {r.generated}")
+    print(f"  {len(finished)} requests through {engine.batch_size} slots "
+          "(third admitted when a slot freed)")
+
+
 def run_kernels():
     print("\n=== the same schedules as fused kernels (CPU interpret) ===")
     key = jax.random.PRNGKey(0)
@@ -66,3 +97,4 @@ if __name__ == "__main__":
     explore(1024, 128)   # paper: alpha = 0.3, 70% reduction
     explore(256, 256)    # paper: no gain at M == N
     run_kernels()
+    continuous_batching()

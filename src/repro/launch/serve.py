@@ -1,4 +1,9 @@
-"""Serving driver: continuous-batching loop over prefill + decode.
+"""Serving driver: continuous-batching loop over the per-slot engine.
+
+Requests of different prompt lengths are prefilled on the side
+(chunked, interleaved with decode) and inserted into free batch rows
+mid-stream; every decode step is one whole-batch launch whose per-row
+``cache_len`` feeds the masked kernels.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
         --requests 6 --max-new 16
@@ -7,7 +12,6 @@
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax
@@ -17,7 +21,8 @@ import numpy as np
 from repro import configs
 from repro.models import transformer as tf
 from repro.models.common import split_params
-from repro.serve import Request, RequestBatcher, engine
+from repro.serve import (ContinuousBatchingEngine, Request,
+                         RequestBatcher, make_serving_plan)
 
 
 def main(argv=None):
@@ -29,16 +34,19 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     params, _ = split_params(tf.init_model(jax.random.PRNGKey(0), cfg))
     dtype = jnp.dtype(cfg.compute_dtype)
 
-    state = engine.init_decode_state(cfg, args.batch, args.max_len, dtype)
-    decode = jax.jit(functools.partial(engine.decode_step, cfg=cfg))
+    plan = make_serving_plan(cfg, max_len=args.max_len)
+    eng = ContinuousBatchingEngine(
+        params, cfg, batch_size=args.batch, max_len=args.max_len,
+        plan=plan, dtype=dtype, prefill_chunk=args.prefill_chunk)
 
-    batcher = RequestBatcher(args.batch)
+    batcher = RequestBatcher(args.batch, max_len=args.max_len)
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
@@ -46,32 +54,17 @@ def main(argv=None):
         batcher.submit(Request(uid=uid, prompt=prompt,
                                max_new_tokens=args.max_new))
 
-    # NOTE: per-slot prefill (row-local cache update). For simplicity the
-    # smoke driver re-prefills the whole batch when slots change; a
-    # production engine prefills per-row with paged caches.
-    holder = {"state": state}
-
-    def prefill_fn(slot_ids, prompts):
-        s = holder["state"]
-        maxlen = max(len(p) for p in prompts)
-        toks = np.zeros((args.batch, maxlen), np.int32)
-        for i, p in zip(slot_ids, prompts):
-            toks[i, -len(p):] = p
-        holder["state"] = engine.prefill(
-            params, cfg, jnp.asarray(toks), s)
-
-    def decode_fn():
-        new_state, logits = decode(params, state=holder["state"])
-        holder["state"] = new_state
-        return np.asarray(new_state.last_token)
-
     t0 = time.time()
-    finished = batcher.run(prefill_fn, decode_fn,
-                           max_steps=args.max_new * args.requests)
+    finished = batcher.serve(
+        eng, max_steps=args.max_new * args.requests + args.requests)
     dt = time.time() - t0
     total_tokens = sum(len(r.generated) for r in finished)
     print(f"served {len(finished)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/max(dt,1e-9):.1f} tok/s)")
+    if plan is not None:
+        paths = {p for (ph, _, _, p, _) in plan.resolutions
+                 if ph == "decode"}
+        print(f"decode kernel paths used: {sorted(paths)}")
     for r in finished[:3]:
         print(f"  req {r.uid}: prompt {len(r.prompt)} toks -> "
               f"{r.generated[:8]}...")

@@ -240,6 +240,23 @@ class ExecutionPlan:
     def predicted_peak_words(self) -> int:
         return self.predict().peak_active_words
 
+    def block_skip_fraction(self, row_lens) -> float:
+        """Predicted fraction of per-row KV block iterations the
+        masked kernels skip for one decode step over rows at contexts
+        ``row_lens``, relative to the uniform whole-batch step (every
+        row paying the deepest row's depth).  This is the per-slot
+        compute saving continuous batching unlocks: each row touches
+        ``ceil(len/block_kv)`` KV tiles instead of the batch maximum —
+        the serving benchmark reports it next to the measured
+        speedup."""
+        bk = self.tiling.block_kv
+        lens = [int(l) for l in row_lens if int(l) > 0]
+        if not lens:
+            return 0.0
+        per_row = [-(-l // bk) for l in lens]
+        deepest = max(per_row)
+        return 1.0 - sum(per_row) / (deepest * len(per_row))
+
     # -- rendering ----------------------------------------------------
 
     def __repr__(self) -> str:

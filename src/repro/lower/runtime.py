@@ -230,11 +230,26 @@ class ServingPlan:
         return plan_cache.bucket_for(
             "decode", min(max(ctx_len, 1), self.max_len), self.head_dim)
 
+    def step_dispatch(self, live_lens) -> PlanDispatch:
+        """One whole-batch decode dispatch resolved from the
+        *distribution* of live row contexts: the deepest live row
+        picks the bucket (every shallower row is legal under a deeper
+        plan), and the per-row lengths flowing into the masked kernels
+        do the per-row work skipping.  ``live_lens`` is the live
+        slots' host-side context lengths — dead rows excluded, so a
+        draining batch never plans for an evicted row's stale depth."""
+        deepest = max((int(v) for v in live_lens), default=0)
+        return self.decode_dispatch(deepest + 1)
+
     def concrete_ctx(self, cache_len) -> int:
         """Host-side context length from a DecodeState's ``cache_len``
-        scalar; under a trace (abstract value) fall back to the buffer
-        capacity — the conservative deepest-context plan."""
+        (a scalar, or the continuous-batching engine's per-row (B,)
+        vector — the deepest row governs the whole-batch step); under
+        a trace (abstract value) fall back to the buffer capacity —
+        the conservative deepest-context plan."""
         try:
+            if getattr(cache_len, "ndim", 0) == 1:
+                return max(int(v) for v in cache_len)
             return int(cache_len)
         except Exception:
             return self.max_len

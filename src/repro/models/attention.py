@@ -21,7 +21,10 @@ tiling, and the downgrade ledger.  KV-cached calls (decode / chunked
 prefill) pass a ``lengths`` mask and stay on the planned Pallas path:
 ops routes them to the masked scalar-prefetch kernels, whose causal
 rows anchor at the end of the valid prefix — exactly this module's
-``q_offset = cache_len = lengths - s`` convention.
+``q_offset = cache_len = lengths - s`` convention.  With per-row (B,)
+``cache_len`` (the continuous-batching engine's per-slot state) the
+append becomes a vmapped per-row scatter, ``q_offset`` is dropped and
+``lengths = cache_len + 1`` alone carries each row's causal frontier.
 
 KV caches: GQA stores (k, v) per layer; MLA stores the *latent* cache
 (c_kv + rope key), decoding in absorbed form — (B, S, 576) instead of
@@ -77,6 +80,41 @@ def _plan_kernel_args(cfg: ModelConfig, plan, interpret: bool):
         interpret or plan.interpret
 
 
+def _per_row(cache_len) -> bool:
+    """True when ``cache_len`` carries one write position per batch row
+    ((B,) int32 from the continuous-batching engine) rather than a
+    single scalar shared by the whole batch."""
+    return getattr(cache_len, "ndim", 0) == 1
+
+
+def _scatter_rows(buf, new, starts, seq_axis: int):
+    """Per-row cache append: write ``new`` into ``buf`` at offset
+    ``starts[b]`` along ``seq_axis`` (batch is axis 0 of both)."""
+    def one(row_buf, row_new, start):
+        idx = [0] * row_buf.ndim
+        idx[seq_axis - 1] = start
+        return jax.lax.dynamic_update_slice(row_buf, row_new, tuple(idx))
+    return jax.vmap(one)(buf, new.astype(buf.dtype), starts)
+
+
+def _cache_write(cache_len, b: int, s: int):
+    """Normalise the two decode conventions to (starts, lengths,
+    q_offset, per_row): uniform scalar ``cache_len`` keeps the scalar
+    ``q_offset`` contract; per-row (B,) ``cache_len`` drops q_offset —
+    at single-token steps the masked kernels anchor each row's causal
+    frontier at ``lengths - s`` which IS the per-row write position."""
+    if _per_row(cache_len):
+        if s != 1:
+            raise NotImplementedError(
+                "per-row cache_len supports single-token decode steps; "
+                "run multi-token (chunked) prefill per request with a "
+                "scalar cache_len, then insert() the result")
+        starts = cache_len.astype(jnp.int32)
+        return starts, starts + s, None, True
+    return (cache_len, jnp.full((b,), cache_len + s, jnp.int32),
+            cache_len, False)
+
+
 def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
@@ -128,15 +166,22 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
         q = constrain(q, "batch", "heads", "seq", "head_dim")
 
     if decode:
-        # write new kv at cache_len (same position for all rows)
-        k_buf = jax.lax.dynamic_update_slice(
-            cache["k"], k_new.astype(cache["k"].dtype),
-            (0, 0, cache_len, 0))
-        v_buf = jax.lax.dynamic_update_slice(
-            cache["v"], v_new.astype(cache["v"].dtype),
-            (0, 0, cache_len, 0))
+        starts, lengths, q_off, per_row = _cache_write(cache_len, b, s)
+        if per_row:
+            # continuous batching: each row appends at its own valid
+            # length (a vmapped scatter), and the per-row lengths flow
+            # straight into the masked kernels
+            k_buf = _scatter_rows(cache["k"], k_new, starts, 2)
+            v_buf = _scatter_rows(cache["v"], v_new, starts, 2)
+        else:
+            # uniform batch: one slice write at the shared position
+            k_buf = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype),
+                (0, 0, starts, 0))
+            v_buf = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype),
+                (0, 0, starts, 0))
         new_cache = {"k": k_buf, "v": v_buf}
-        lengths = jnp.full((b,), cache_len + s, jnp.int32)
         if dist:
             from repro.serve.distributed_decode import \
                 distributed_decode_attention
@@ -158,12 +203,12 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 return out, new_cache
             o = ops.qproj_attention(
                 x, wq, k_buf.astype(dt), v_buf.astype(dt),
-                causal=cfg.causal, q_offset=cache_len, lengths=lengths,
+                causal=cfg.causal, q_offset=q_off, lengths=lengths,
                 rope_theta=theta, impl=impl, block_q=bq, block_k=bk,
                 interpret=interpret, plan=plan)
         else:
             o = ops.attention(q, k_buf.astype(dt), v_buf.astype(dt),
-                              causal=cfg.causal, q_offset=cache_len,
+                              causal=cfg.causal, q_offset=q_off,
                               lengths=lengths,
                               impl=impl, block_q=bq, block_k=bk,
                               interpret=interpret, plan=plan)
@@ -270,16 +315,19 @@ def mla_forward(params, cfg: ModelConfig, x, positions, *,
                            params["wk_b"].astype(dt))
         q_full = jnp.concatenate([q_lat, q_rope], axis=-1)
         latent_new = jnp.concatenate([c, k_rope], axis=-1)
-        buf = jax.lax.dynamic_update_slice(
-            cache["latent"], latent_new.astype(cache["latent"].dtype),
-            (0, cache_len, 0))
+        starts, lengths, q_off, per_row = _cache_write(cache_len, b, s)
+        if per_row:
+            buf = _scatter_rows(cache["latent"], latent_new, starts, 1)
+        else:
+            buf = jax.lax.dynamic_update_slice(
+                cache["latent"], latent_new.astype(cache["latent"].dtype),
+                (0, starts, 0))
         new_cache = {"latent": buf}
         k_lat = buf.astype(dt)[:, None]                  # (B,1,S,r+rope)
         v_lat = buf.astype(dt)[:, None, :, :cfg.kv_lora_rank]
-        lengths = jnp.full((b,), cache_len + s, jnp.int32)
         scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
         o_lat = ops.attention(q_full, k_lat, v_lat, causal=cfg.causal,
-                              q_offset=cache_len,
+                              q_offset=q_off,
                               scale=scale, lengths=lengths,
                               impl=impl, block_q=bq, block_k=bk,
                               interpret=interpret,

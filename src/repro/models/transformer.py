@@ -144,7 +144,10 @@ def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
             interpret: bool = False, return_aux: bool = False,
             plan=None):
     """tokens: (B, S) int32 and/or embeds: (B, S_f, frontend_dim)
-    (stub modality frontend, prepended).  cache/cache_len: decode mode.
+    (stub modality frontend, prepended).  cache/cache_len: decode mode;
+    ``cache_len`` is either a scalar (whole batch at one uniform
+    context) or a (B,) int32 vector of per-row write positions (the
+    continuous-batching engine's per-slot state).
     ``plan``: a ``lower.runtime.PlanDispatch`` routing every attention
     block through its DSE-assigned kernel path (blocks are identical,
     so one per-block record covers the scanned body — asserted at
@@ -163,8 +166,13 @@ def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
     b, s, _ = x.shape
     if positions is None:
         start = 0 if cache_len is None else cache_len
-        positions = start + jnp.arange(s, dtype=jnp.int32)[None, :]
-        positions = jnp.broadcast_to(positions, (b, s))
+        if getattr(start, "ndim", 0) == 1:
+            # per-row cache_len: row b's new tokens sit at start[b]..
+            positions = (start.astype(jnp.int32)[:, None]
+                         + jnp.arange(s, dtype=jnp.int32)[None, :])
+        else:
+            positions = start + jnp.arange(s, dtype=jnp.int32)[None, :]
+            positions = jnp.broadcast_to(positions, (b, s))
     x = constrain(x, "batch", "seq_stream", "embed_act")
 
     aux_sum = {"moe_lb_loss": 0.0, "moe_z_loss": 0.0}

@@ -1,10 +1,13 @@
-from repro.serve.engine import (DecodeState, chunked_prefill,
-                                decode_step, greedy_sample,
-                                init_decode_state, make_serving_plan,
-                                prefill, serve_step)
+from repro.serve.engine import (ContinuousBatchingEngine, DecodeState,
+                                PrefillResult, chunked_prefill,
+                                decode_step, evict, greedy_sample,
+                                init_decode_state, insert,
+                                make_serving_plan, prefill,
+                                prefill_request, serve_step)
 from repro.serve.batcher import Request, RequestBatcher
 
-__all__ = ["DecodeState", "chunked_prefill", "decode_step",
-           "greedy_sample",
-           "init_decode_state", "make_serving_plan", "prefill",
-           "serve_step", "Request", "RequestBatcher"]
+__all__ = ["ContinuousBatchingEngine", "DecodeState", "PrefillResult",
+           "chunked_prefill", "decode_step", "evict", "greedy_sample",
+           "init_decode_state", "insert", "make_serving_plan",
+           "prefill", "prefill_request", "serve_step",
+           "Request", "RequestBatcher"]

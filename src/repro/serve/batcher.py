@@ -1,23 +1,30 @@
-"""Continuous-batching request scheduler (host-side serving loop).
+"""Admission-controlled request scheduler for the continuous-batching
+engine (host-side serving loop).
 
-Slots of a fixed decode batch are assigned to requests as they arrive;
-finished rows (EOS or max tokens) free their slot for the next queued
-request.  The device-side state is one DecodeState; per-slot lengths
-live host-side.  Straggler note: at multi-host scale the batcher runs
-on host 0 and broadcasts slot assignments with the token batch — decode
-steps stay SPMD.
+Slots of a fixed decode batch are leased to requests as they arrive
+and reclaimed when a row finishes (EOS or budget): ``serve`` drives a
+``ContinuousBatchingEngine`` — new requests are prefilled on the side
+and inserted into free rows while the other rows keep decoding, and
+every step is ONE whole-batch launch whose per-row ``cache_len`` /
+``lengths`` let the masked kernels skip each row's dead KV blocks.
+The per-slot dispatch is real per-row compute, carried by the
+engine's per-slot state.  Straggler note: at multi-host scale the
+batcher runs on host 0 and broadcasts slot assignments with the token
+batch — decode steps stay SPMD.
 
-Plan-awareness: the batcher tracks per-slot context lengths
-(prompt + generated so far).  With a ``lower.runtime.ServingPlan``,
-the ``run`` loop **groups active slots by context bucket**
-(``plan.bucket_of``) and dispatches one micro-batch per bucket: each
-group gets the PlanDispatch resolved for its own deepest context, so a
-short row keeps the cheap unfused path while a deep row in the same
-step runs the fused masked-Pallas path — per-slot plan dispatch
-instead of planning the whole batch for its deepest slot.
-``max_len`` bounds the cache geometry: prompts that cannot fit are
-rejected at ``submit``, and generation budgets are clamped so no row
-can overrun its cache.
+Admission rules:
+
+* FIFO fairness — queued requests are admitted strictly in submit
+  order as slots free up; a long queued prompt is never jumped by a
+  later short one.
+* ``max_concurrency`` budgets how many slots may be live at once
+  (<= batch_size), bounding the per-step KV traffic independently of
+  the allocated batch geometry.
+* ``max_len`` bounds the cache: prompts that cannot fit (no room for
+  even one new token) are rejected at ``submit``; a prompt of exactly
+  ``max_len - 1`` tokens is admitted with its generation budget
+  clamped to 1.  Budgets are always clamped so prompt + generated
+  never overruns a cache row.
 """
 
 from __future__ import annotations
@@ -40,21 +47,25 @@ class Request:
 
 class RequestBatcher:
     def __init__(self, batch_size: int, eos_id: int = -1,
-                 max_len: Optional[int] = None):
+                 max_len: Optional[int] = None,
+                 max_concurrency: Optional[int] = None):
         self.batch_size = batch_size
         self.eos_id = eos_id
         self.max_len = max_len
+        self.max_concurrency = batch_size if max_concurrency is None \
+            else min(max_concurrency, batch_size)
         self.queue: deque = deque()
         self.slots: list = [None] * batch_size
         self.slot_lens: list = [0] * batch_size   # prompt + generated
         self.finished: list = []
 
     def submit(self, req: Request) -> None:
-        """Queue a request.  Legal while ``run`` is mid-flight (the
-        next ``_fill_slots`` picks it up).  With ``max_len`` set, a
-        prompt that cannot fit the cache (no room for even one new
-        token) is rejected, and the generation budget is clamped so
-        prompt + generated never overruns the cache."""
+        """Queue a request.  Legal while ``run``/``serve`` is
+        mid-flight (the next admission pass picks it up).  With
+        ``max_len`` set, a prompt that cannot fit the cache alongside
+        at least one new token is rejected; the generation budget is
+        clamped to the cache headroom (a ``max_len - 1`` prompt is
+        admitted with budget 1)."""
         if self.max_len is not None:
             if len(req.prompt) >= self.max_len:
                 raise ValueError(
@@ -64,10 +75,17 @@ class RequestBatcher:
                                      self.max_len - len(req.prompt))
         self.queue.append(req)
 
+    def _n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
     def _fill_slots(self) -> list:
+        """Admit queued requests into free slots, FIFO, stopping at the
+        ``max_concurrency`` budget.  Returns the newly leased slots."""
         newly = []
         for i in range(self.batch_size):
-            if self.slots[i] is None and self.queue:
+            if not self.queue or self._n_active() >= self.max_concurrency:
+                break
+            if self.slots[i] is None:
                 self.slots[i] = self.queue.popleft()
                 self.slot_lens[i] = len(self.slots[i].prompt)
                 newly.append(i)
@@ -84,9 +102,10 @@ class RequestBatcher:
                         [next_tokens[i] for i, s in enumerate(self.slots)
                          if s is not None])
 
-    def step_slots(self, slot_ids: list, tokens) -> None:
+    def step_slots(self, slot_ids: list, tokens) -> list:
         """Feed back one decoded token for each slot in ``slot_ids``
-        (a micro-batch; other slots untouched)."""
+        (other slots untouched).  Returns the slots that finished."""
+        freed = []
         for i, tok in zip(slot_ids, tokens):
             req = self.slots[i]
             if req is None:
@@ -100,50 +119,46 @@ class RequestBatcher:
                 self.finished.append(req)
                 self.slots[i] = None
                 self.slot_lens[i] = 0
-
-    def bucket_groups(self, plan) -> list:
-        """Active slots grouped by the context bucket their *next* step
-        falls in: ``[(bucket, [slot ids]), ...]`` shallow-first.  Each
-        group is one micro-batch dispatched under its own plan."""
-        groups: dict = {}
-        for i, s in enumerate(self.slots):
-            if s is not None:
-                groups.setdefault(
-                    plan.bucket_of(self.slot_lens[i] + 1), []).append(i)
-        return sorted(groups.items())
+                freed.append(i)
+        return freed
 
     def run(self, prefill_fn: Callable, decode_fn: Callable,
-            max_steps: int = 1000, plan=None) -> list:
-        """Drive the loop: prefill_fn(slot_ids, prompts) seeds caches,
-        decode_fn() -> (B,) next tokens.  With a ``ServingPlan``, the
-        step is split into per-context-bucket micro-batches:
-        decode_fn(dispatch, slot_ids) -> len(slot_ids) next tokens,
-        where ``dispatch`` is the PlanDispatch for that group's
-        deepest context + 1 — short rows keep the cheap unfused path
-        while deep rows run the fused masked-Pallas path in the same
-        step.
-
-        Contract: decode_fn must advance device state for the listed
-        ``slot_ids`` ONLY.  ``engine.decode_step`` is a whole-batch
-        step over one uniform ``cache_len`` and is NOT a valid
-        per-group decode_fn — invoked once per group it would append
-        to every row's KV cache per group, corrupting out-of-group
-        slots.  A per-group decode_fn must own per-slot state (one
-        DecodeState per bucket, or row gather/scatter with per-row
-        cache positions — see the ROADMAP item)."""
+            max_steps: int = 1000) -> list:
+        """Drive a callback loop: prefill_fn(slot_ids, prompts) seeds
+        caches, decode_fn() -> (B,) next tokens advances every active
+        row in one whole-batch step.  (Per-slot kernel work is the
+        engine's per-row state — see ``serve`` — not a scheduler
+        concern.)"""
         steps = 0
         while self.active and steps < max_steps:
             new_slots = self._fill_slots()
             if new_slots:
                 prefill_fn(new_slots,
                            [self.slots[i].prompt for i in new_slots])
-            if plan is not None:
-                for _, slot_ids in self.bucket_groups(plan):
-                    ctx = max(self.slot_lens[i] for i in slot_ids)
-                    toks = decode_fn(plan.decode_dispatch(ctx + 1),
-                                     slot_ids)
-                    self.step_slots(slot_ids, np.asarray(toks))
-            else:
-                self.step(np.asarray(decode_fn()))
+            self.step(np.asarray(decode_fn()))
+            steps += 1
+        return self.finished
+
+    def serve(self, engine, max_steps: int = 1000) -> list:
+        """Drive a :class:`~repro.serve.engine.ContinuousBatchingEngine`
+        to completion (or ``max_steps``): admit queued requests into
+        free engine slots (FIFO, budgeted), let the engine prefill and
+        insert them mid-stream, feed decoded tokens back per slot, and
+        evict rows the moment they finish so the next request can take
+        the slot — the decode loop never stops for admission."""
+        steps = 0
+        while (self.active or engine._pending) and steps < max_steps:
+            for slot in self._fill_slots():
+                engine.begin_prefill(slot, self.slots[slot].prompt)
+            tokens, inserted = engine.step()
+            # a request's first token is sampled by its prefill
+            for slot, first in inserted:
+                for f in self.step_slots([slot], [first]):
+                    engine.evict(f)
+            if tokens is not None:
+                ready = [i for i in range(self.batch_size)
+                         if engine.live[i] and self.slots[i] is not None]
+                for f in self.step_slots(ready, tokens[ready]):
+                    engine.evict(f)
             steps += 1
         return self.finished

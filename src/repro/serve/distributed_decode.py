@@ -67,6 +67,11 @@ def distributed_decode_attention(
     combination across `axis`.  Requires an active mesh (sharding.rules
     context); falls back to the caller's path otherwise.
 
+    ``lengths`` is per-row: with the continuous-batching engine these
+    are the true per-slot write positions (``cache_len + 1``), so
+    mixed-depth batches shard-combine correctly — a shard wholly past
+    a row's valid prefix contributes a zeroed partial for that row.
+
     ``plan`` (a ``lower.runtime.PlanDispatch``): annotated, not
     consulted — the per-shard partial IS the streamed score pipeline
     (the (m, l, o) triple the Fig. 5c schedule forwards), so this path

@@ -24,6 +24,18 @@ Every KV-cached step (decode and each chunked-prefill chunk) carries a
 scalar-prefetch kernels mask score tiles in-kernel, so the resolved
 kernel path is the path that executes (zero lengths downgrades).
 
+Continuous batching: ``DecodeState.cache_len`` is a (B,) int32 vector
+of per-row write positions, so one whole-batch decode launch serves
+rows at *different* depths — each row appends at its own position and
+its own length flows into the masked kernels, which skip the KV blocks
+past it (per-row compute, not just a per-row mask).  The lifecycle is
+``init_decode_state → prefill_request → insert(result, slot) →
+generate``: a new request is prefilled on the side (one-shot or
+chunk-by-chunk, interleaved with decode steps) and its B=1 cache is
+scattered into a free batch row without stopping the decode loop.
+:class:`ContinuousBatchingEngine` packages the lifecycle with host
+mirrors of per-slot state so step dispatch never reads device memory.
+
 Caches: GQA k/v ring, MLA latent (B,S,576), Mamba conv+state.
 
 ``serve_step`` is what the dry-run lowers for decode_* shapes: one new
@@ -37,6 +49,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as tf
 from repro.models.common import ModelConfig
@@ -46,7 +59,7 @@ from repro.models.common import ModelConfig
 @dataclasses.dataclass
 class DecodeState:
     cache: Any
-    cache_len: jax.Array          # scalar int32: filled prefix length
+    cache_len: jax.Array          # (B,) int32: per-row filled prefix
     last_token: jax.Array         # (B,) int32
 
 
@@ -76,7 +89,7 @@ def init_decode_state(cfg: ModelConfig, batch: int,
             "contexts past the last plan bucket would be unplanned")
     return DecodeState(
         cache=tf.init_model_cache(cfg, batch, max_len, dtype),
-        cache_len=jnp.zeros((), jnp.int32),
+        cache_len=jnp.zeros((batch,), jnp.int32),
         last_token=jnp.zeros((batch,), jnp.int32),
     )
 
@@ -99,9 +112,9 @@ def prefill(params, cfg: ModelConfig, tokens, state: DecodeState, *,
     logits, new_cache = tf.forward(
         params, cfg, tokens=tokens, embeds=embeds, cache=state.cache,
         cache_len=0, interpret=interpret, plan=dispatch)
-    s = logits.shape[1]
+    b, s = logits.shape[0], logits.shape[1]
     return DecodeState(cache=new_cache,
-                       cache_len=jnp.asarray(s, jnp.int32),
+                       cache_len=jnp.full((b,), s, jnp.int32),
                        last_token=greedy_sample(logits))
 
 
@@ -130,25 +143,32 @@ def chunked_prefill(params, cfg: ModelConfig, tokens,
             params, cfg, tokens=piece, cache=cache, cache_len=start,
             interpret=interpret, plan=dispatch)
     return DecodeState(cache=cache,
-                       cache_len=jnp.asarray(s, jnp.int32),
+                       cache_len=jnp.full((b,), s, jnp.int32),
                        last_token=greedy_sample(logits))
 
 
 def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
-                plan=None, interpret: bool = False
+                plan=None, dispatch=None, active=None,
+                interpret: bool = False
                 ) -> tuple[DecodeState, jax.Array]:
     """One token for every row (M=1: the paper's M<N schedule regime).
 
     With a ``ServingPlan`` the step re-resolves its ExecutionPlan for
-    the context the scores will span (cache prefix + the new token) —
-    the kernel path switches the step the context crosses
+    the context the scores will span (deepest row's cache prefix + the
+    new token) — the kernel path switches the step the context crosses
     ``plan.crossover_ctx`` (= 2N, the analytical alpha_kv crossover).
     Beyond it, a RoPE-only config runs the decode megakernel: the whole
     attention sub-block (projection + RoPE through the residual add) is
     one Pallas launch per block.
+
+    ``dispatch``: a pre-resolved PlanDispatch (e.g. from
+    ``ServingPlan.step_dispatch`` over host-side row lengths) — skips
+    the device read ``plan`` needs to learn the context.  ``active``:
+    (B,) bool; rows where it is False keep their ``cache_len`` and
+    ``last_token`` (free slots ride along in the batch without
+    advancing — their lane's output is computed and discarded).
     """
-    dispatch = None
-    if plan is not None:
+    if dispatch is None and plan is not None:
         ctx = plan.concrete_ctx(state.cache_len) + 1
         dispatch = plan.decode_dispatch(ctx)
     logits, new_cache = tf.forward(
@@ -156,7 +176,12 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
         cache=state.cache, cache_len=state.cache_len,
         interpret=interpret, plan=dispatch)
     nxt = greedy_sample(logits)
-    return DecodeState(cache=new_cache, cache_len=state.cache_len + 1,
+    step = jnp.ones_like(state.cache_len)
+    if active is not None:
+        act = jnp.asarray(active)
+        nxt = jnp.where(act, nxt, state.last_token)
+        step = act.astype(state.cache_len.dtype)
+    return DecodeState(cache=new_cache, cache_len=state.cache_len + step,
                        last_token=nxt), logits[:, -1]
 
 
@@ -166,3 +191,206 @@ def serve_step(params, cfg: ModelConfig, state: DecodeState, *,
     new_state, _ = decode_step(params, cfg, state, plan=plan,
                                interpret=interpret)
     return new_state
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: prefill_request -> insert -> generate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefillResult:
+    """A prefilled request, ready to insert: the B=1 cache (allocated
+    at the engine's max_len so its rows scatter straight into the
+    batch cache), the prompt length, and the first sampled token."""
+    cache: Any
+    length: jax.Array             # () int32: prompt tokens in the cache
+    next_token: jax.Array         # () int32: first generated token
+
+
+def prefill_request(params, cfg: ModelConfig, prompt, *,
+                    max_len: Optional[int] = None, plan=None,
+                    chunk_size: Optional[int] = None,
+                    dtype=jnp.float32,
+                    interpret: bool = False) -> PrefillResult:
+    """Prefill one request on the side (B=1), without touching any
+    decode batch: returns a :class:`PrefillResult` for ``insert``.
+    ``max_len`` must match the target batch's cache geometry (taken
+    from ``plan.max_len`` when omitted)."""
+    toks = jnp.asarray(prompt, jnp.int32)
+    if toks.ndim == 1:
+        toks = toks[None, :]
+    state = init_decode_state(cfg, 1, max_len, dtype, plan=plan)
+    if chunk_size is None:
+        state = prefill(params, cfg, toks, state, plan=plan,
+                        interpret=interpret)
+    else:
+        state = chunked_prefill(params, cfg, toks, state,
+                                chunk_size=chunk_size, plan=plan,
+                                interpret=interpret)
+    return PrefillResult(cache=state.cache, length=state.cache_len[0],
+                         next_token=state.last_token[0])
+
+
+def insert(state: DecodeState, result: PrefillResult,
+           slot: int) -> DecodeState:
+    """Scatter a prefilled request into batch row ``slot`` — cache
+    rows, write position and last token — while every other row's
+    state is untouched, so the decode loop never stops for admission.
+    The result's cache must share the batch cache's max_len (enforced
+    by the row-shape match of the scatter)."""
+    def put(axis):
+        def f(full, row):
+            return jax.lax.dynamic_update_index_in_dim(
+                full, jnp.squeeze(row, axis=axis).astype(full.dtype),
+                slot, axis)
+        return f
+    # batch sits at axis 0 of prefix-layer caches and axis 1 of the
+    # period-stacked scan caches (n_periods leads)
+    cache = {
+        "prefix": jax.tree.map(put(0), state.cache["prefix"],
+                               result.cache["prefix"]),
+        "scan": jax.tree.map(put(1), state.cache["scan"],
+                             result.cache["scan"]),
+    }
+    return DecodeState(
+        cache=cache,
+        cache_len=state.cache_len.at[slot].set(
+            jnp.asarray(result.length, jnp.int32)),
+        last_token=state.last_token.at[slot].set(
+            jnp.asarray(result.next_token, jnp.int32)))
+
+
+def evict(state: DecodeState, slot: int) -> DecodeState:
+    """Free batch row ``slot``: zero its write position and token.
+    The KV rows themselves stay in place — the next ``insert`` into
+    the slot overwrites them wholesale — so eviction is O(1)
+    bookkeeping, and a freed row costs one masked (length ~0) lane in
+    subsequent steps until it is re-leased."""
+    return DecodeState(
+        cache=state.cache,
+        cache_len=state.cache_len.at[slot].set(0),
+        last_token=state.last_token.at[slot].set(0))
+
+
+class ContinuousBatchingEngine:
+    """The ``init_decode_state → prefill → insert → generate``
+    lifecycle as one object: a fixed-geometry decode batch whose rows
+    are leased to requests and reclaimed as they finish, with new
+    requests prefilled and inserted mid-stream.
+
+    Host-side mirrors (``row_ctx``, ``live``) track per-slot state so
+    each step's plan dispatch is resolved from the *distribution* of
+    live row contexts (``ServingPlan.step_dispatch``) without reading
+    device memory; the per-row ``cache_len`` then feeds the masked
+    kernels, which skip each row's dead KV blocks — the per-slot
+    compute split the per-bucket micro-batching could only approximate.
+
+    With ``prefill_chunk`` set, a pending prompt advances one chunk
+    per ``step()`` alongside the decode launch — chunked prefill
+    interleaved with decode in the same scheduler step.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
+                 max_len: Optional[int] = None, plan=None,
+                 dtype=jnp.float32, prefill_chunk: Optional[int] = None,
+                 interpret: bool = False):
+        if max_len is None:
+            if plan is None:
+                raise TypeError(
+                    "ContinuousBatchingEngine: pass max_len or a plan")
+            max_len = plan.max_len
+        self.params, self.cfg, self.plan = params, cfg, plan
+        self.batch_size, self.max_len = batch_size, max_len
+        self.dtype, self.interpret = dtype, interpret
+        self.prefill_chunk = prefill_chunk
+        self.state = init_decode_state(cfg, batch_size, max_len, dtype,
+                                       plan=plan)
+        self.row_ctx = [0] * batch_size   # host mirror of cache_len
+        self.live = [False] * batch_size
+        self._pending: dict = {}          # slot -> in-flight prefill
+
+    @property
+    def occupancy(self) -> float:
+        return sum(self.live) / self.batch_size
+
+    def free_slots(self) -> list:
+        return [i for i in range(self.batch_size)
+                if not self.live[i] and i not in self._pending]
+
+    def begin_prefill(self, slot: int, prompt) -> None:
+        """Lease ``slot`` to a new request.  The prompt is prefilled on
+        a side B=1 cache — one-shot, or (with ``prefill_chunk``) one
+        chunk per subsequent ``step()`` — and inserted into the slot
+        when complete; the decode loop never pauses."""
+        if self.live[slot] or slot in self._pending:
+            raise ValueError(f"slot {slot} is not free")
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        if toks.shape[1] > self.max_len:
+            raise ValueError(f"prompt ({toks.shape[1]} tokens) exceeds "
+                             f"cache max_len {self.max_len}")
+        side = init_decode_state(self.cfg, 1, self.max_len, self.dtype)
+        self._pending[slot] = {"tokens": toks, "pos": 0,
+                               "cache": side.cache}
+
+    def _advance_prefills(self) -> list:
+        """Run one prefill chunk per pending request; insert the ones
+        that complete.  Returns [(slot, first_token), ...]."""
+        inserted = []
+        for slot, p in list(self._pending.items()):
+            total = p["tokens"].shape[1]
+            chunk = self.prefill_chunk or total
+            piece = p["tokens"][:, p["pos"]:p["pos"] + chunk]
+            dispatch = None
+            if self.plan is not None:
+                dispatch = self.plan.chunk_dispatch(
+                    p["pos"] + piece.shape[1], piece.shape[1])
+            logits, p["cache"] = tf.forward(
+                self.params, self.cfg, tokens=piece, cache=p["cache"],
+                cache_len=p["pos"], interpret=self.interpret,
+                plan=dispatch)
+            p["pos"] += piece.shape[1]
+            if p["pos"] >= total:
+                res = PrefillResult(
+                    cache=p["cache"],
+                    length=jnp.asarray(total, jnp.int32),
+                    next_token=greedy_sample(logits)[0])
+                self.state = insert(self.state, res, slot)
+                self.row_ctx[slot] = total
+                self.live[slot] = True
+                del self._pending[slot]
+                inserted.append((slot, int(res.next_token)))
+        return inserted
+
+    def step(self):
+        """One scheduler step: advance every pending prefill by one
+        chunk (inserting completions), then one whole-batch decode
+        launch over the live rows — per-row lengths let the masked
+        kernels skip each row's dead KV blocks.  Returns
+        ``(tokens, inserted)``: the (B,) last tokens (None if no row
+        is live) and the [(slot, first_token), ...] insertions."""
+        inserted = self._advance_prefills()
+        if not any(self.live):
+            return None, inserted
+        dispatch = None
+        if self.plan is not None:
+            dispatch = self.plan.step_dispatch(
+                [c for c, alive in zip(self.row_ctx, self.live)
+                 if alive])
+        self.state, _ = decode_step(
+            self.params, self.cfg, self.state, dispatch=dispatch,
+            active=jnp.asarray(self.live), interpret=self.interpret)
+        for i in range(self.batch_size):
+            if self.live[i]:
+                self.row_ctx[i] += 1
+        return np.asarray(self.state.last_token), inserted
+
+    # the lifecycle verb: prefill -> insert -> *generate*
+    generate = step
+
+    def evict(self, slot: int) -> None:
+        """Reclaim ``slot`` (request finished or cancelled): frees the
+        row for the next ``begin_prefill`` without touching any other
+        row's cache."""
+        self.state = evict(self.state, slot)
+        self.row_ctx[slot] = 0
+        self.live[slot] = False

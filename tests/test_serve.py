@@ -104,35 +104,81 @@ def test_batcher_request_longer_than_max_len():
     assert len(done[0].prompt) + len(done[0].generated) <= 8
 
 
-def test_batcher_plan_aware_run_dispatches_per_bucket_micro_batches():
-    """With a ServingPlan, run() groups active slots by context bucket
-    and dispatches one micro-batch per bucket: a short row and a deep
-    row get DIFFERENT kernel paths in the same step once the deep
-    row's context crosses the alpha_kv crossover (2N = 64)."""
+def test_serving_plan_step_dispatch_follows_deepest_live_row():
+    """step_dispatch resolves ONE whole-batch dispatch from the
+    distribution of live row contexts: the deepest live row picks the
+    bucket (kernel path switches when IT crosses the 2N = 64
+    crossover), and evicting the deep row drops the step back to the
+    shallow rows' cheap path — dead rows never inflate the plan."""
     from repro import lower
     cfg = configs.get_config("qwen3-8b", smoke=True)   # N=32, 2N=64
     plan = lower.serving_plan(cfg, max_len=192)
-    b = RequestBatcher(batch_size=2, eos_id=-1, max_len=192)
-    b.submit(Request(uid=0, prompt=list(range(60)), max_new_tokens=8))
-    b.submit(Request(uid=1, prompt=list(range(3)), max_new_tokens=8))
-    calls = []          # (path, slot_ids) per micro-batch dispatch
+    # shallow rows only: below the crossover, materialising is free
+    assert plan.step_dispatch([3, 10]).path == lower.UNFUSED
+    # a deep live row pulls the whole step past the crossover
+    assert plan.step_dispatch([3, 100]).path == lower.FUSED_ATTENTION
+    # the deep row finished and was evicted: back to the cheap path
+    assert plan.step_dispatch([3, 10]).path == lower.UNFUSED
+    # drained batch resolves the minimal plan instead of a stale depth
+    assert plan.step_dispatch([]).path == lower.UNFUSED
 
-    def decode_fn(dispatch, slot_ids):
-        calls.append((dispatch.path, tuple(slot_ids)))
-        return np.ones(len(slot_ids), np.int32)
 
-    b.run(lambda s, p: None, decode_fn, max_steps=16, plan=plan)
+class _StubEngine:
+    """Host-only engine double recording the serve-loop protocol."""
 
-    # both slots start in the first (<= 2N) bucket: one micro-batch
-    assert calls[0] == (lower.UNFUSED, (0, 1))
-    # once slot 0 crosses 64 the step splits into two micro-batches
-    # (shallow bucket first) with different kernel paths
-    split_steps = [(a, c) for a, c in zip(calls, calls[1:])
-                   if a[1] == (1,) and c[1] == (0,)]
-    assert split_steps, f"no split step found: {calls}"
-    short, deep = split_steps[0]
-    assert short[0] == lower.UNFUSED           # short row stays cheap
-    assert deep[0] == lower.FUSED_ATTENTION    # deep row streams
+    def __init__(self, batch_size):
+        self.batch_size = batch_size
+        self.live = [False] * batch_size
+        self.row_ctx = [0] * batch_size
+        self._pending = {}
+        self.events = []
+
+    def begin_prefill(self, slot, prompt):
+        assert not self.live[slot] and slot not in self._pending
+        self._pending[slot] = len(prompt)
+        self.events.append(("prefill", slot, len(prompt)))
+
+    def step(self):
+        inserted = []
+        for slot, n in list(self._pending.items()):
+            self.live[slot], self.row_ctx[slot] = True, n
+            del self._pending[slot]
+            inserted.append((slot, 100 + slot))
+        if not any(self.live):
+            return None, inserted
+        toks = np.zeros(self.batch_size, np.int64)
+        for i in range(self.batch_size):
+            if self.live[i]:
+                self.row_ctx[i] += 1
+                toks[i] = self.row_ctx[i]
+        self.events.append(("step", tuple(self.live)))
+        return toks, inserted
+
+    def evict(self, slot):
+        self.live[slot], self.row_ctx[slot] = False, 0
+        self.events.append(("evict", slot))
+
+
+def test_batcher_serve_admission_fifo_and_eviction():
+    """serve() drives the engine protocol: FIFO admission into free
+    slots under the max_concurrency budget, eviction the moment a
+    request finishes, and every request completes."""
+    b = RequestBatcher(batch_size=3, eos_id=-1, max_concurrency=2)
+    for uid in range(5):
+        b.submit(Request(uid=uid, prompt=[1] * (uid + 2),
+                         max_new_tokens=3))
+    eng = _StubEngine(3)
+    done = b.serve(eng, max_steps=40)
+    assert sorted(r.uid for r in done) == list(range(5))
+    assert all(len(r.generated) == 3 for r in done)
+    # FIFO: prefills happen in submit order (queue fairness)
+    order = [e[2] for e in eng.events if e[0] == "prefill"]
+    assert order == [2, 3, 4, 5, 6]     # prompt lengths, uid order
+    # admission control: never more than max_concurrency live rows
+    assert all(sum(e[1]) <= 2 for e in eng.events if e[0] == "step")
+    # every leased slot was evicted after finishing
+    assert sum(e[0] == "evict" for e in eng.events) == 5
+    assert not any(eng.live)
 
 
 def test_chunked_prefill_matches_one_shot_and_switches_paths():
@@ -156,7 +202,7 @@ def test_chunked_prefill_matches_one_shot_and_switches_paths():
                          plan=plan)
     np.testing.assert_array_equal(np.asarray(s1.last_token),
                                   np.asarray(s2.last_token))
-    assert int(s2.cache_len) == 96
+    assert int(s2.cache_len[0]) == 96
 
     # chunk resolutions: ctx 16 (prefill), then decode-regime chunks at
     # ctx 32..96 — the path switches exactly past the 2N = 64 edge

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Verify that documentation code snippets stay verbatim copies of the
+source they claim to quote (no dependencies, no imports of the code
+under test — safe for the docs CI job).
+
+A markdown fence annotated with a snippet marker names its source file:
+
+    <!-- snippet: examples/quickstart.py -->
+    ```python
+    from repro.serve import ...
+    ```
+
+Every line of the fence must appear in the named file as one
+contiguous block, modulo one uniform indentation prefix (so a snippet
+shown flush-left may live inside a function).  Blank snippet lines
+match blank source lines.
+
+    python tools/check_snippets.py docs
+
+Exits non-zero listing every drifted snippet.  Also importable —
+``check_files(paths, root)`` returns the problem list (used by
+tests/test_docs.py, which keeps the check in the required fast tier).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SNIPPET_RE = re.compile(
+    r"<!--\s*snippet:\s*(?P<src>\S+)\s*-->\s*\n"
+    r"```[^\n]*\n(?P<body>.*?)```",
+    re.DOTALL)
+
+
+def _match_at(source_lines: list[str], start: int,
+              snippet_lines: list[str]) -> bool:
+    """True if the snippet appears at ``start`` under one uniform
+    indentation prefix."""
+    first = snippet_lines[0]
+    indent = source_lines[start][: len(source_lines[start])
+                                 - len(first)]
+    if source_lines[start] != indent + first or indent.strip():
+        return False
+    for off, line in enumerate(snippet_lines):
+        if start + off >= len(source_lines):
+            return False
+        want = (indent + line) if line else ""
+        if source_lines[start + off].rstrip() != want.rstrip():
+            return False
+    return True
+
+
+def snippet_in_file(snippet: str, source: str) -> bool:
+    snip = [l.rstrip() for l in snippet.rstrip("\n").split("\n")]
+    src = [l.rstrip() for l in source.split("\n")]
+    first = snip[0]
+    for i, line in enumerate(src):
+        if line.endswith(first) and _match_at(src, i, snip):
+            return True
+    return False
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    problems = []
+    try:
+        label = str(md.relative_to(root))
+    except ValueError:
+        label = str(md)
+    for m in SNIPPET_RE.finditer(md.read_text()):
+        src_path = root / m.group("src")
+        if not src_path.exists():
+            problems.append(f"{label}: snippet source missing -> "
+                            f"{m.group('src')}")
+            continue
+        if not snippet_in_file(m.group("body"), src_path.read_text()):
+            problems.append(
+                f"{label}: snippet drifted from {m.group('src')} "
+                "(the fenced block is not a contiguous verbatim "
+                "region of the source)")
+    return problems
+
+
+def check_files(paths: list[Path], root: Path) -> list[str]:
+    problems = []
+    for p in paths:
+        mds = sorted(p.rglob("*.md")) if p.is_dir() else [p]
+        for md in mds:
+            problems.extend(check_file(md, root))
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = Path.cwd()
+    paths = [Path(a) for a in (argv or ["docs"])]
+    problems = check_files(paths, root)
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"check_snippets: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
