@@ -1,0 +1,134 @@
+"""§Mesh lowering: heterogeneous DSE search + 2-device mesh execution.
+
+Two kinds of rows:
+
+* deterministic DSE rows (stable regression signal, no jax timing
+  noise): the heterogeneous GA's found fitness and softmax-offload
+  count on the canonical 1 PE-array + 1 SIMD-heavy platform, and the
+  engine-predicted ``comm_cycles`` of head-partitioned multi-core
+  schedules (round-robin vs skewed vs single-core) — the numbers
+  ``tools/validate_costmodel.py --mesh`` validates against measured
+  collectives;
+* measured mesh rows (informational, ``_us`` fields): the wall-time of
+  the output-partial psum the lowered head-parallel serve executes,
+  plus one full ``head_parallel_decode_attention`` step, on a forced
+  2-device host mesh.  The bench re-execs those cells in a child
+  process so the parent's jax (already initialised with one device)
+  stays untouched.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.core import accelerator as acc
+from repro.core import allocation as galloc
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+
+_CHILD = textwrap.dedent("""
+    import json, time
+    import jax, jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh_lowering import mesh_for_cores
+    from repro.sharding import set_rules_for_mesh
+    from repro.serve.distributed_decode import head_parallel_decode_attention
+
+    def measure_us(fn, args, repeats=5):
+        jfn = jax.jit(fn)
+        jax.block_until_ready(jfn(*args))
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    mesh = mesh_for_cores(2)
+    rows = []
+    for M, E in ((64, 256), (128, 512)):
+        fn = shard_map(lambda x: jax.lax.psum(x, "model"), mesh=mesh,
+                       in_specs=P("model", None, None),
+                       out_specs=P(None, None, None), check_rep=False)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, M, E),
+                              jnp.float32)
+        rows.append({"name": f"mesh_psum_M{M}_E{E}",
+                     "collective_us": round(measure_us(fn, (x,)), 1)})
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (2, 4, 1, 32))
+    k = jax.random.normal(ks[1], (2, 2, 64, 32))
+    v = jax.random.normal(ks[2], (2, 2, 64, 32))
+    wo = jax.random.normal(ks[3], (4, 32, 128)) * 0.1
+    lengths = jnp.array([64, 17])
+    with set_rules_for_mesh(mesh):
+        us = measure_us(lambda *a: head_parallel_decode_attention(*a),
+                        (q, k, v, lengths, wo))
+    rows.append({"name": "mesh_head_parallel_step",
+                 "step_us": round(us, 1)})
+    print(json.dumps(rows))
+""")
+
+
+def _dse_rows() -> list:
+    rows = []
+    hetero = acc.hetero_platform(1, 1)
+    ga = galloc.optimize_allocation(64, 16, 2, hetero, generations=6,
+                                    population=8, seed=0)
+    all_pe = sch.evaluate(wl.parallel_heads(64, 16, 2), hetero,
+                          galloc.heads_schedule(64, 16, (0, 0)),
+                          row_block=1)
+    rows.append({
+        "name": "hetero_ga_softmax_offload",
+        "platform": hetero.name,
+        "allocation": list(ga.allocation),
+        "softmax_allocation": list(ga.softmax_allocation),
+        "offloaded_heads": sum(
+            1 for c, s in zip(ga.allocation, ga.softmax_allocation)
+            if s != c),
+        "fitness_cycles": ga.fitness,
+        "all_pe_cycles": all_pe.latency_cycles,
+        "speedup_vs_all_pe": round(all_pe.latency_cycles / ga.fitness, 2),
+        "evaluations": ga.evaluations,
+    })
+    accel = acc.multi_core_array(2)
+    for label, allocation in (("rr", (0, 1, 0, 1)),
+                              ("skew", (0, 0, 0, 1)),
+                              ("single", (0, 0, 0, 0))):
+        workload, schedule = galloc.head_partition_schedule(
+            64, 256, 4, 64, allocation)
+        res = sch.evaluate(workload, accel, schedule, row_block=1)
+        rows.append({
+            "name": f"head_partition_comm_{label}",
+            "allocation": list(allocation),
+            "comm_cycles": res.comm_cycles,
+            "latency_cycles": res.latency_cycles,
+        })
+    return rows
+
+
+def _mesh_rows() -> list:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + ([os.environ["PYTHONPATH"]]
+                      if "PYTHONPATH" in os.environ else [])))
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        return [{"name": "mesh_measured_skipped",
+                 "reason": out.stderr[-500:]}]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run() -> list:
+    return _dse_rows() + _mesh_rows()
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -32,6 +32,7 @@ MODULES = {
     "phase_sweep": "benchmarks.phase_sweep",
     "lowering_bench": "benchmarks.lowering_bench",
     "serving_bench": "benchmarks.serving_bench",
+    "mesh_bench": "benchmarks.mesh_bench",
     "kernel_bench": "benchmarks.kernel_bench",
     "roofline": "benchmarks.roofline",
 }
@@ -39,7 +40,7 @@ MODULES = {
 # module name -> JSON artifact area (default: the module name itself)
 AREAS = {"kernel_bench": "kernels", "engine_bench": "engine",
          "blocks_bench": "blocks", "lowering_bench": "lowering",
-         "serving_bench": "serving"}
+         "serving_bench": "serving", "mesh_bench": "mesh"}
 
 
 def main(argv=None) -> None:

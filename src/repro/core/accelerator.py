@@ -226,6 +226,116 @@ def multi_core_array(n_cores: int, l1_io_words: int = 1 << 22) -> Accelerator:
     )
 
 
+def _core_kind(core: Core) -> tuple:
+    """Structural signature of a core's compute resources: two cores
+    with the same kind are interchangeable for placement purposes."""
+    return (core.array_rows, core.array_cols, core.macs_per_pe_per_cycle,
+            core.utilization,
+            core.simd.width if core.simd is not None else None)
+
+
+def is_heterogeneous(accel: Accelerator) -> bool:
+    """True when the platform mixes core types (different array shapes
+    or SIMD widths) — the regime where placement must be type-aware."""
+    return len({_core_kind(c) for c in accel.cores}) > 1
+
+
+def widest_simd_core(accel: Accelerator) -> Optional[int]:
+    """Index of the core with the widest SIMD unit (softmax target), or
+    None when no core can execute vector nodes at all."""
+    best = None
+    for i, c in enumerate(accel.cores):
+        if c.simd is None:
+            continue
+        if best is None or c.simd.width > accel.cores[best].simd.width:
+            best = i
+    return best
+
+
+def widest_array_core(accel: Accelerator) -> int:
+    """Index of the core with the highest sustained MAC throughput (the
+    big-matmul target)."""
+    return max(range(len(accel.cores)),
+               key=lambda i: accel.cores[i].effective_macs_per_cycle)
+
+
+def pe_array_core(name: str = "pe64x64", *, simd_width: int = 2,
+                  l1_io_words: int = 1 << 22) -> Core:
+    """A matmul-oriented 64x64 PE-array core with a deliberately NARROW
+    SIMD unit: vector nodes (softmax, layernorm, accumulation) are
+    *legal* on it but slow — the cost gradient the heterogeneous GA
+    exploits when a SIMD-heavy core exists next door."""
+    levels = (
+        MemoryLevel("L1-io", size=l1_io_words, bandwidth=64.0,
+                    read_energy=1.0, write_energy=1.2),
+        MemoryLevel("L1-rhs", size=l1_io_words, bandwidth=4096.0,
+                    read_energy=1.0, write_energy=1.2),
+        MemoryLevel("L2", size=None, bandwidth=64.0,
+                    read_energy=8.0, write_energy=9.0),
+    )
+    return Core(name=name, array_rows=64, array_cols=64, mac_energy=1.0,
+                utilization=1.0, levels=levels,
+                simd=SIMDUnit(width=simd_width, op_energy=0.2),
+                rhs_level_index=1)
+
+
+def simd_heavy_core(name: str = "simd2048", *, simd_width: int = 2048,
+                    l1_io_words: int = 1 << 22) -> Core:
+    """A vector-oriented core: a small 8x8 array beside a very wide
+    SIMD unit — softmax-heavy stages migrate here."""
+    levels = (
+        MemoryLevel("L1-io", size=l1_io_words, bandwidth=64.0,
+                    read_energy=1.0, write_energy=1.2),
+        MemoryLevel("L2", size=None, bandwidth=64.0,
+                    read_energy=8.0, write_energy=9.0),
+    )
+    return Core(name=name, array_rows=8, array_cols=8, mac_energy=0.6,
+                utilization=1.0, levels=levels,
+                simd=SIMDUnit(width=simd_width, op_energy=0.1))
+
+
+def mxu_core(name: str = "mxu128", *, l1_io_words: int = 1 << 22) -> Core:
+    """An MXU-like core: a wide 128x128 systolic array with NO SIMD
+    unit at all — vector nodes raise ``IllegalSchedule`` on it, so
+    searches over platforms containing one must tolerate infeasible
+    genomes (core/allocation.py scores them +inf)."""
+    levels = (
+        MemoryLevel("L1-io", size=l1_io_words, bandwidth=128.0,
+                    read_energy=1.0, write_energy=1.2),
+        MemoryLevel("L2", size=None, bandwidth=64.0,
+                    read_energy=8.0, write_energy=9.0),
+    )
+    return Core(name=name, array_rows=128, array_cols=128, mac_energy=0.8,
+                utilization=1.0, levels=levels, simd=None)
+
+
+def hetero_platform(n_pe: int = 1, n_simd: int = 1, n_mxu: int = 0, *,
+                    pe_simd_width: int = 2, simd_width: int = 2048,
+                    l1_io_words: int = 1 << 22) -> Accelerator:
+    """A heterogeneous multi-core platform mixing the three core types
+    this repo's DSE distinguishes: ``n_pe`` 64x64 PE-array cores
+    (narrow SIMD), ``n_simd`` SIMD-heavy cores, and ``n_mxu`` MXU-like
+    cores (no SIMD).  Cores are ordered PE, SIMD, MXU; the same
+    point-to-point fabric as ``multi_core_array``."""
+    cores = tuple(
+        pe_array_core(f"pe64x64-{i}", simd_width=pe_simd_width,
+                      l1_io_words=l1_io_words) for i in range(n_pe)
+    ) + tuple(
+        simd_heavy_core(f"simd-{i}", simd_width=simd_width,
+                        l1_io_words=l1_io_words) for i in range(n_simd)
+    ) + tuple(
+        mxu_core(f"mxu-{i}", l1_io_words=l1_io_words)
+        for i in range(n_mxu)
+    )
+    return Accelerator(
+        name=f"hetero[{n_pe}pe+{n_simd}simd+{n_mxu}mxu]", cores=cores,
+        interconnect_bandwidth=64.0, offchip_bandwidth=64.0,
+        frequency_hz=1e9,
+        interconnect=Interconnect(bandwidth=64.0, energy_per_word=2.0,
+                                  latency=0.0, topology="ptp"),
+    )
+
+
 def tpu_v5e_like() -> Accelerator:
     """Runtime co-design target.  Numbers from the assignment's hardware
     constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.

@@ -82,6 +82,61 @@ def fuse_all(prefix: str = "", core: int = 0) -> sch.Schedule:
                (f"{p}SM", f"{p}AV")}, core=core)
 
 
+def softmax_offload(prefix: str = "", core: int = 0, sm_core: int = 1,
+                    policy: str = "fuse_pv") -> sch.Schedule:
+    """One head with its softmax migrated to ``sm_core`` (a SIMD-heavy
+    core on a heterogeneous platform): the matmul chain stays on
+    ``core``.  Under an unfused policy the score matrix crosses the
+    link as a whole tensor; under a fusing policy the score pipeline's
+    intra-stage edges become *cross-core streamed* edges — QK^T rows
+    forwarded to the SIMD core and softmax rows forwarded back, double
+    buffered on the link, never parked in either L1 (the engine's
+    cross-core streamed-edge model; cf. ``split_head_pipeline``)."""
+    if sm_core == core:
+        raise ValueError(
+            "softmax_offload needs a distinct SIMD core; same-core "
+            "schedules are the named presets (lbl/fuse_pv/...)")
+    p = prefix
+    qkt, sm, av = f"{p}QKT", f"{p}SM", f"{p}AV"
+    if policy == "lbl":
+        pre = [sch.Stage(layers=(f"{p}{n}",), core=core)
+               for n in ("Q", "K", "V")]
+        pre.append(sch.Stage(layers=(qkt,), core=core))
+        stages = pre + [sch.Stage(layers=(sm,), core=sm_core),
+                        sch.Stage(layers=(av,), core=core)]
+    elif policy == "fuse_q_qkt":
+        stages = [
+            sch.Stage(layers=(f"{p}K",), core=core),
+            sch.Stage(layers=(f"{p}Q", qkt),
+                      streamed=frozenset({(f"{p}Q", qkt)}), core=core),
+            sch.Stage(layers=(f"{p}V",), core=core),
+            sch.Stage(layers=(sm,), core=sm_core),
+            sch.Stage(layers=(av,), core=core),
+        ]
+    elif policy in ("fuse_pv", "fuse_all"):
+        if policy == "fuse_all":
+            pre = [sch.Stage(layers=(f"{p}K",), core=core),
+                   sch.Stage(layers=(f"{p}V",), core=core),
+                   sch.Stage(layers=(f"{p}Q", qkt),
+                             streamed=frozenset({(f"{p}Q", qkt)}),
+                             core=core)]
+        else:
+            pre = [sch.Stage(layers=(f"{p}{n}",), core=core)
+                   for n in ("K", "V", "Q")]
+            pre.append(sch.Stage(layers=(qkt,), core=core))
+        stages = pre + [
+            sch.Stage(layers=(sm,), streamed=frozenset({(qkt, sm)}),
+                      core=sm_core),
+            sch.Stage(layers=(av,), streamed=frozenset({(sm, av)}),
+                      core=core),
+        ]
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    return sch.Schedule(
+        name=f"offload[{policy}]@{core}->sm{sm_core}",
+        stages=tuple(stages))
+
+
 def candidates(prefix: str = "", core: int = 0) -> list[sch.Schedule]:
     """The named preset space for one attention head: QKV orderings for
     LBL plus every fusion pattern.  Each entry is a point of the
@@ -224,7 +279,7 @@ def explore(workload: Union[int, wl.Workload], N: Optional[int] = None,
                 "heads into the workload itself")
         net = workload
         cands = spacegen.generate(net, n_cores=accel.n_cores,
-                                  options=space)
+                                  options=space, accel=accel)
         if row_block is None:
             rows = max(l.rows for l in net.layers.values())
             row_block = max(1, rows // 64)

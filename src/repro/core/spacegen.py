@@ -28,8 +28,11 @@ space from the layer DAG instead of from a template:
 
 3. **Placements.**  Each ordering is mapped onto the platform's cores:
    everything on core 0; weakly-connected components (independent
-   heads) round-robin across cores; and a macs-balanced contiguous
-   pipeline split of the ordering.
+   heads) round-robin across cores; a macs-balanced contiguous
+   pipeline split of the ordering; and — when an ``Accelerator`` is
+   passed and it mixes core types — a type-aware split that sends
+   vector-dominated groups (softmax, norms) to the widest-SIMD core
+   and matmul-dominated groups to the highest-throughput array.
 
 Pruning keeps block-sized graphs tractable: besides the symmetry
 breaking and the per-axis caps, when the assembled space still exceeds
@@ -84,7 +87,7 @@ class SpaceOptions:
     max_orderings: int = 12       # linear extensions per fusion cut
     max_cuts: int = 48            # fusion-cut combinations
     max_candidates: int = 256     # total schedules after pruning
-    placements: tuple[str, ...] = ("c0", "rr", "pipeline")
+    placements: tuple[str, ...] = ("c0", "rr", "pipeline", "hetero")
     periodic: bool = True         # reuse one block's sub-space
     inter_block: tuple[str, ...] = ("df", "bp")
 
@@ -376,11 +379,31 @@ def _components(groups: dict, group_deps: dict) -> dict:
 
 def _placements(workload: wl.Workload, groups: dict, group_deps: dict,
                 order: tuple, n_cores: int,
-                wanted: Sequence[str]) -> list:
+                wanted: Sequence[str], accel=None) -> list:
     """(tag, group id -> core) placements for one ordering."""
     out = [("c0", {g: 0 for g in groups})] if "c0" in wanted else []
     if n_cores <= 1:
         return out or [("c0", {g: 0 for g in groups})]
+    if "hetero" in wanted and accel is not None and accel.n_cores > 1:
+        from repro.core import accelerator as _acc
+        if _acc.is_heterogeneous(accel):
+            simd_best = _acc.widest_simd_core(accel)
+            mac_best = _acc.widest_array_core(accel)
+            if simd_best is not None and simd_best != mac_best:
+                placement = {}
+                for g in groups:
+                    vec = sum(workload.layers[m].vector_ops()
+                              for m in groups[g])
+                    mac = sum(workload.layers[m].macs()
+                              for m in groups[g])
+                    core = simd_best if vec > mac else mac_best
+                    # a group with any vector work is only legal on a
+                    # core with a SIMD unit
+                    if vec and accel.cores[core].simd is None:
+                        core = simd_best
+                    placement[g] = core
+                if len(set(placement.values())) > 1:
+                    out.append(("het", placement))
     if "rr" in wanted:
         comp = _components(groups, group_deps)
         if len(set(comp.values())) > 1:
@@ -591,7 +614,7 @@ def _rename_stage(stage: sch.Stage, old: str, new: str,
 
 
 def _generate_periodic(net: wl.Workload, n_cores: int,
-                       options: SpaceOptions) -> list:
+                       options: SpaceOptions, accel=None) -> list:
     """Block-periodic generation: enumerate the sub-space of block 0
     (cuts x orderings x placements) once, then replicate each
     sub-schedule across every block — identical blocks receive
@@ -603,7 +626,7 @@ def _generate_periodic(net: wl.Workload, n_cores: int,
     for ``_prune``."""
     sub = block_subworkload(net)
     subspace = generate(sub, n_cores, dataclasses.replace(
-        options, periodic=False))
+        options, periodic=False), accel=accel)
     prefixes = net.period_prefixes
     p0 = prefixes[0]
     modes = [m for m in options.inter_block
@@ -628,10 +651,13 @@ def _generate_periodic(net: wl.Workload, n_cores: int,
 # ---------------------------------------------------------------------------
 
 def generate(workload: wl.Workload, n_cores: int = 1,
-             options: Optional[SpaceOptions] = None) -> list:
+             options: Optional[SpaceOptions] = None,
+             accel=None) -> list:
     """Enumerate legal schedules for ``workload`` over ``n_cores``
     cores: fusion cuts x topological orderings x core placements,
     symmetry-broken, capped and dominance-pruned per ``options``.
+    ``accel`` (an ``Accelerator``) unlocks the type-aware "hetero"
+    placement on platforms mixing core types.
 
     For block-periodic networks (``workload.period_prefixes`` set by
     ``workload.network``) with ``options.periodic`` (the default), one
@@ -661,7 +687,7 @@ def generate(workload: wl.Workload, n_cores: int = 1,
     options = options or SpaceOptions()
     if options.periodic and len(workload.period_prefixes) > 1:
         return _prune(workload, _generate_periodic(
-            workload, n_cores, options), options.max_candidates)
+            workload, n_cores, options, accel), options.max_candidates)
     out: list = []        # ((cut index, placement tag), schedule)
     seen: set = set()
     for ci, fused in enumerate(_cuts(workload, options)):
@@ -675,7 +701,7 @@ def generate(workload: wl.Workload, n_cores: int = 1,
                                               options.max_orderings)):
             for tag, core_of in _placements(workload, groups, group_deps,
                                             order, n_cores,
-                                            options.placements):
+                                            options.placements, accel):
                 stages = _stages(groups, order, fused, core_of)
                 if stages in seen:
                     continue

@@ -15,9 +15,14 @@ import jax
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    try:
+        axis_type = jax.sharding.AxisType.Auto
+    except AttributeError:
+        # jax < 0.6: no explicit-sharding axis types — every mesh axis
+        # is Auto already, and make_mesh has no axis_types kwarg
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,182 @@
+"""Lowering a DSE head->core allocation onto a real jax device mesh.
+
+The heterogeneous GA (``core/allocation.optimize_allocation``) decides
+which core runs which attention head; the engine prices the resulting
+cross-core traffic (partial-output transfers + input broadcast) as
+``Result.comm_cycles``.  This module closes the loop: a 2-core DSE
+schedule becomes a 2-device sharded serve —
+
+  * ``mesh_for_cores(n)`` builds a (data=1, model=n) mesh, one mesh
+    column per DSE core;
+  * ``lower_to_mesh(plan, accel, allocation)`` wraps an
+    ``ExecutionPlan`` into a :class:`MeshLoweredPlan` whose
+    ``activate()`` context makes the serving stack route decode
+    attention through ``serve.distributed_decode.
+    head_parallel_decode_attention`` (each shard runs its heads
+    full-depth and psums (B, S, d_model) output partials — the jax
+    analogue of the engine's ``acc{h}`` replica-transfer chain);
+  * ``predicted_comm_seconds`` converts the engine's predicted
+    ``comm_cycles`` at ``accel.frequency_hz`` into the number
+    ``tools/validate_costmodel.py --mesh`` compares against measured
+    collective wall-time.
+
+Pure mapping logic; jax device state is only touched by
+``mesh_for_cores`` (so the module imports fine before XLA_FLAGS-driven
+device forcing, like ``launch.mesh``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core import allocation as galloc
+from repro.core import scheduler as sch
+from repro.core.accelerator import Accelerator
+from repro.lower.plan import ExecutionPlan
+from repro.sharding import rules as shrules
+
+__all__ = ["mesh_for_cores", "MeshLoweredPlan", "lower_to_mesh"]
+
+
+def mesh_for_cores(n_cores: int, *, data: int = 1):
+    """A (data, model=n_cores) mesh with one model column per DSE core.
+
+    Raises ``ValueError`` when the host exposes fewer than
+    ``data * n_cores`` devices (tests force the count via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — a silent
+    clamp would break the core<->device correspondence the lowering
+    promises.
+    """
+    need = data * n_cores
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"mesh_for_cores({n_cores}, data={data}) needs {need} "
+            f"devices, host exposes {have} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})")
+    from repro.launch.mesh import _mk
+    return _mk((data, n_cores), ("data", "model"))
+
+
+@dataclasses.dataclass
+class MeshLoweredPlan:
+    """An ExecutionPlan bound to a device mesh under a head->core
+    allocation.
+
+    ``predict()`` evaluates the head-partitioned analytical schedule
+    (``allocation.head_partition_schedule``) on the DSE platform —
+    NOT the plan's own single-core source schedule — so its
+    ``comm_cycles`` prices exactly the traffic the lowered serve pays:
+    one (M x d_model) partial per non-root core plus the input
+    broadcast.  ``activate()`` returns the sharding-rules context that
+    makes the serving stack take the head-parallel decode path.
+    """
+
+    plan: ExecutionPlan
+    accel: Accelerator
+    allocation: tuple
+    mesh: object
+    d_model: int
+    axis: str = "model"
+    softmax_allocation: Optional[tuple] = None
+    _predicted: Optional[sch.Result] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_heads(self) -> int:
+        return len(self.allocation)
+
+    def predict(self, row_block: Optional[int] = None) -> sch.Result:
+        if self._predicted is not None and row_block is None:
+            return self._predicted
+        workload, schedule = galloc.head_partition_schedule(
+            self.plan.M, self.d_model, self.n_heads, self.plan.head_dim,
+            tuple(self.allocation),
+            sm_allocation=self.softmax_allocation)
+        if row_block is None:
+            row_block = max(1, self.plan.M // 64)
+        res = sch.evaluate(workload, self.accel, schedule,
+                           row_block=row_block)
+        if row_block == max(1, self.plan.M // 64):
+            self._predicted = res
+        return res
+
+    @property
+    def predicted_comm_cycles(self) -> float:
+        return self.predict().comm_cycles
+
+    @property
+    def predicted_comm_seconds(self) -> float:
+        """Engine link-busy cycles at the platform clock — the number
+        validated against measured collective wall-time."""
+        return self.predict().comm_cycles / self.accel.frequency_hz
+
+    def activate(self):
+        """Context manager activating the mesh for the serving stack
+        (``sharding.rules.set_rules_for_mesh``): inside, a config with
+        ``head_parallel_decode=True`` routes decode attention through
+        the head-partitioned shard_map."""
+        return shrules.set_rules_for_mesh(self.mesh)
+
+    def describe(self) -> str:
+        lines = [
+            f"MeshLoweredPlan[{self.plan.config_name} {self.plan.phase} "
+            f"M={self.plan.M} N={self.plan.head_dim} "
+            f"d_model={self.d_model}]",
+            f"  allocation: head->core {tuple(self.allocation)}"
+            + (f" softmax->{tuple(self.softmax_allocation)}"
+               if self.softmax_allocation is not None else ""),
+            f"  mesh: {dict(zip(self.mesh.axis_names, self.mesh.devices.shape))}"
+            f" over axis {self.axis!r}",
+            f"  predicted comm: {self.predicted_comm_cycles:.0f} cycles"
+            f" = {self.predicted_comm_seconds * 1e6:.3f} us"
+            f" @ {self.accel.frequency_hz / 1e9:g} GHz",
+        ]
+        return "\n".join(lines)
+
+
+def lower_to_mesh(plan: ExecutionPlan, accel: Accelerator,
+                  allocation, *,
+                  d_model: Optional[int] = None,
+                  mesh=None,
+                  sm_allocation=None,
+                  axis: str = "model") -> MeshLoweredPlan:
+    """Bind a decode ExecutionPlan + head->core allocation to a mesh.
+
+    ``allocation`` maps head -> DSE core (``GAResult.allocation``);
+    the mesh's ``axis`` dimension must have one device per distinct
+    core actually used (defaults to a fresh ``mesh_for_cores`` over
+    ``accel.n_cores``).  ``d_model`` defaults to
+    ``len(allocation) * plan.head_dim``.  The lowering is recorded on
+    the plan's note ledger so validation output shows it.
+    """
+    allocation = tuple(int(c) for c in allocation)
+    if not allocation:
+        raise ValueError("empty head allocation")
+    if any(c < 0 or c >= accel.n_cores for c in allocation):
+        raise ValueError(
+            f"allocation {allocation} names cores outside "
+            f"{accel.name}'s 0..{accel.n_cores - 1}")
+    if d_model is None:
+        d_model = len(allocation) * plan.head_dim
+    if mesh is None:
+        mesh = mesh_for_cores(accel.n_cores)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in mesh_shape:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh_shape}")
+    n_used = len(set(allocation))
+    if mesh_shape[axis] < n_used:
+        raise ValueError(
+            f"allocation uses {n_used} cores but mesh axis {axis!r} "
+            f"has {mesh_shape[axis]} devices")
+    lowered = MeshLoweredPlan(
+        plan=plan, accel=accel, allocation=allocation, mesh=mesh,
+        d_model=d_model, axis=axis, softmax_allocation=sm_allocation)
+    plan.note(
+        f"lowered to mesh {mesh_shape} over {axis!r}: head->core "
+        f"{allocation}, predicted comm "
+        f"{lowered.predicted_comm_cycles:.0f} cycles")
+    return lowered

@@ -138,12 +138,18 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
     from repro.sharding import rules as _shrules
     dist = decode and cfg.distributed_decode and s == 1 \
         and _shrules._current()[0] is not None
+    # head-parallel decode: the DSE head->core allocation lowered onto
+    # the mesh's model axis (launch/mesh_lowering.py) — each shard runs
+    # its heads full-depth and psums output partials.  Mutually
+    # exclusive with the seq-sharded dist path; inert without a mesh.
+    hp = decode and cfg.head_parallel_decode and s == 1 and not dist \
+        and _shrules._current()[0] is not None
     # Q-fusion: the kernel projects (and rotates) Q from x itself, so
     # Q never exists host-side.  Legal only without qk-norm (a
     # data-dependent transform between projection and scores the
     # kernel does not fold) — dispatch legalisation already downgrades
     # such plans; this guard refuses hand-built inconsistent ones.
-    fuse_q = decode and not dist and plan is not None \
+    fuse_q = decode and not dist and not hp and plan is not None \
         and getattr(plan, "fuse_q", False) and not cfg.qk_norm
 
     def project_kv():
@@ -182,6 +188,15 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 cache["v"], v_new.astype(cache["v"].dtype),
                 (0, 0, starts, 0))
         new_cache = {"k": k_buf, "v": v_buf}
+        if hp:
+            from repro.serve.distributed_decode import \
+                head_parallel_decode_attention
+            out = head_parallel_decode_attention(
+                q, k_buf.astype(dt), v_buf.astype(dt), lengths,
+                params["wo"].astype(dt), plan=plan)
+            if residual is not None:
+                out = residual + out
+            return out, new_cache
         if dist:
             from repro.serve.distributed_decode import \
                 distributed_decode_attention

@@ -69,6 +69,12 @@ class ModelConfig:
     # §Perf beyond-paper optimizations (default off = paper-faithful
     # baseline; see EXPERIMENTS.md §Perf)
     distributed_decode: bool = False    # partial-softmax decode combine
+    head_parallel_decode: bool = False  # head-partitioned decode step:
+    #                                     each shard runs its heads'
+    #                                     full-depth attention + its
+    #                                     slice of the output projection,
+    #                                     one psum of (B,S,D) partials
+    #                                     (launch/mesh_lowering.py)
     moe_local_dispatch: bool = False    # route+scatter per shard inside
     #                                     shard_map (per-device capacity;
     #                                     only the EP all-to-all crosses

@@ -120,3 +120,72 @@ def distributed_decode_attention(
         out_specs=P(bspec, None, None, None),
         check_rep=False)
     return fn(q, k, v, lengths)
+
+
+def head_parallel_decode_attention(
+    q: jax.Array,            # (B, Hq, S1, D)
+    k: jax.Array,            # (B, Hkv, S, D) — full depth, heads sharded
+    v: jax.Array,
+    lengths: jax.Array,      # (B,)
+    wo: jax.Array,           # (Hq, Dv, Dmodel) output projection
+    *,
+    scale: Optional[float] = None,
+    axis: str = "model",
+    plan=None,
+) -> jax.Array:
+    """Head-partitioned decode step: the lowered form of the DSE's
+    head->core allocation (``allocation.head_partition_schedule``).
+    Each mesh shard along ``axis`` owns a contiguous slice of heads,
+    runs their *full-depth* attention locally, applies its slice of the
+    output projection, and the shards' (B, S, Dmodel) partial outputs
+    are summed with one ``psum`` — the jax analogue of the engine-side
+    ``acc{h}`` chain whose replica transfers make up the predicted
+    ``comm_cycles``.  Returns the combined (B, S, Dmodel) output (the
+    caller adds the residual).
+
+    Requires an active mesh whose ``axis`` size divides both Hq and
+    Hkv (head groups must not straddle shards).
+    """
+    mesh = shrules._current()[0]
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[3]
+    scale = scale if scale is not None else d ** -0.5
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    if hq % n_shards or hkv % n_shards:
+        raise ValueError(
+            f"head-parallel decode needs heads divisible by the "
+            f"{axis!r} axis: Hq={hq}, Hkv={hkv}, shards={n_shards}")
+    if plan is not None:
+        if plan.path != "fused_attention":
+            plan.plan.record_downgrade(
+                "head-parallel decode streams each shard's score "
+                "pipeline (per-head partition, one output psum)",
+                plan.path, "fused_attention")
+        plan.plan.note(
+            f"head-parallel decode over axis {axis!r}: cross-shard "
+            "traffic is one (B, S, d_model) output partial per shard")
+
+    def per_shard(q, k, v, lengths, wo):
+        bl, hq_local = q.shape[0], q.shape[1]
+        # full-depth local attention over this shard's heads
+        o, m, l = _local_partial(q, k, v, 0, lengths, scale)
+        l = jnp.where(l == 0.0, 1.0, l)
+        o = (o / l[..., None]).reshape(bl, hq_local, sq, dv)
+        # this shard's slice of the output projection -> (B, S, Dmodel)
+        out = jnp.einsum("bhse,hed->bsd", o, wo.astype(jnp.float32))
+        return jax.lax.psum(out, axis)
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else \
+        (batch_axes[0] if batch_axes else None)
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(bspec, axis, None, None),
+                  P(bspec, axis, None, None),
+                  P(bspec, axis, None, None),
+                  P(bspec),
+                  P(axis, None, None)),
+        out_specs=P(bspec, None, None),
+        check_rep=False)
+    return fn(q, k, v, lengths, wo).astype(q.dtype)

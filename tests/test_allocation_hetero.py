@@ -1,0 +1,166 @@
+"""Heterogeneous-platform GA allocation: determinism, genome legality,
+softmax-offload golden, the head-partition comm model, and the
+mutation_rate=0.0 falsy-default regression.  Pure core-DSE — tier-1."""
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                        # CI installs it; degrade to
+    HAS_HYPOTHESIS = False                 # the deterministic tests
+
+from repro.core import accelerator as acc
+from repro.core import allocation as ga
+from repro.core import scheduler as sch
+from repro.core import workload as wl
+
+
+def _small_ga(accel, n_heads, seed, **kw):
+    kw.setdefault("population", 6)
+    kw.setdefault("generations", 3)
+    return ga.optimize_allocation(8, 8, n_heads, accel, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# property: determinism and genome legality
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    platforms = st.builds(
+        acc.hetero_platform,
+        n_pe=st.integers(1, 2),
+        n_simd=st.integers(1, 2),
+        n_mxu=st.integers(0, 1),
+    )
+
+    @settings(max_examples=10, deadline=None)
+    @given(accel=platforms, n_heads=st.integers(1, 4),
+           seed=st.integers(0, 99))
+    def test_ga_deterministic_per_seed(accel, n_heads, seed):
+        """Same seed, same platform -> identical GAResult genome and
+        fitness (the search draws all randomness from one seeded rng)."""
+        a = _small_ga(accel, n_heads, seed)
+        b = _small_ga(accel, n_heads, seed)
+        assert a.allocation == b.allocation
+        assert a.softmax_allocation == b.softmax_allocation
+        assert a.fitness == b.fitness
+
+    @settings(max_examples=10, deadline=None)
+    @given(accel=platforms, n_heads=st.integers(1, 4),
+           seed=st.integers(0, 99))
+    def test_ga_genomes_legal_on_hetero(accel, n_heads, seed):
+        """The winning genome maps every head to a legal core id, and
+        every softmax gene to either the head's own core or a
+        SIMD-capable core; the returned Result is a real (feasible)
+        evaluation."""
+        r = _small_ga(accel, n_heads, seed)
+        simd_cores = {i for i, c in enumerate(accel.cores)
+                      if c.simd is not None}
+        assert len(r.allocation) == n_heads
+        assert all(0 <= c < accel.n_cores for c in r.allocation)
+        assert r.softmax_allocation is not None  # hetero auto-detected
+        assert all(s == c or s in simd_cores
+                   for c, s in zip(r.allocation, r.softmax_allocation))
+        assert isinstance(r.result, sch.Result)
+        assert r.fitness < float("inf")
+
+
+def test_homogeneous_path_unchanged():
+    """On an identical-cores platform the genome stays the plain
+    head->core tuple (no softmax gene) — and is deterministic."""
+    accel = acc.multi_core_array(2)
+    a = ga.optimize_allocation(16, 16, 4, accel, seed=0)
+    b = ga.optimize_allocation(16, 16, 4, accel, seed=0)
+    assert a.allocation == b.allocation
+    assert a.softmax_allocation is None
+
+
+# ---------------------------------------------------------------------------
+# golden: softmax migrates to the SIMD core
+# ---------------------------------------------------------------------------
+
+def test_ga_offloads_softmax_to_simd_core():
+    """On a 1 PE-array + 1 SIMD-heavy platform the GA streams every
+    head's softmax to the SIMD core (the PE core's width-2 vector unit
+    makes local softmax ~M*N cycles/head), and the found fitness beats
+    the all-PE-array no-offload allocation strictly."""
+    accel = acc.hetero_platform(1, 1)
+    r = ga.optimize_allocation(64, 16, 2, accel, generations=6,
+                               population=8, seed=0)
+    simd = acc.widest_simd_core(accel)
+    assert r.softmax_allocation is not None
+    assert all(s == simd for s in r.softmax_allocation)
+    all_pe = sch.evaluate(wl.parallel_heads(64, 16, 2), accel,
+                          ga.heads_schedule(64, 16, (0, 0)), row_block=1)
+    assert r.fitness < all_pe.latency_cycles
+
+
+# ---------------------------------------------------------------------------
+# head-partition comm model
+# ---------------------------------------------------------------------------
+
+def test_head_partition_comm_monotone():
+    """comm_cycles of the head-partitioned MHSA schedule prices exactly
+    the cross-core partial transfers + input broadcast: zero when every
+    head lives on the root core, and strictly growing with the number
+    of off-root heads."""
+    accel = acc.multi_core_array(2)
+
+    def comm(allocation):
+        workload, schedule = ga.head_partition_schedule(
+            64, 256, 4, 64, allocation)
+        return sch.evaluate(workload, accel, schedule,
+                            row_block=1).comm_cycles
+
+    single = comm((0, 0, 0, 0))
+    skew = comm((0, 0, 0, 1))
+    rr = comm((0, 1, 0, 1))
+    assert single == 0.0
+    assert 0.0 < skew < rr
+
+
+# ---------------------------------------------------------------------------
+# regression: explicit mutation_rate=0.0 must disable mutation
+# ---------------------------------------------------------------------------
+
+def _initial_population(seed, n_heads, n_cores, population):
+    """Replay of optimize_allocation's homogeneous seeding: round-robin
+    plus rng-drawn genomes from random.Random(seed)."""
+    rng = random.Random(seed)
+    pop = [tuple(h % n_cores for h in range(n_heads))]
+    while len(pop) < population:
+        pop.append(tuple(rng.randrange(n_cores) for _ in range(n_heads)))
+    return pop
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_mutation_rate_zero_is_crossover_only(monkeypatch, seed):
+    """With mutation_rate=0.0, evolution is crossover-only: every
+    genome the GA ever evaluates draws each gene from the initial
+    population's alleles at that locus.  The historical falsy-default
+    bug (`mutation_rate or 1/n_heads`) silently restored mutation and
+    violates this for every one of these seeds."""
+    n_cores, n_heads, population = 12, 4, 3
+    accel = acc.multi_core_array(n_cores)
+    seen = []
+    orig = ga.heads_schedule
+
+    def spy(M, N, allocation, policy="auto", sm_allocation=None):
+        seen.append(tuple(allocation))
+        return orig(M, N, allocation, policy, sm_allocation=sm_allocation)
+
+    monkeypatch.setattr(ga, "heads_schedule", spy)
+    ga.optimize_allocation(16, 16, n_heads, accel, population=population,
+                           generations=10, mutation_rate=0.0, seed=seed)
+    locus = [{g[i] for g in _initial_population(seed, n_heads, n_cores,
+                                                population)}
+             for i in range(n_heads)]
+    assert seen, "GA evaluated no genomes"
+    for genome in seen:
+        for i, allele in enumerate(genome):
+            assert allele in locus[i], (
+                f"seed {seed}: genome {genome} carries a mutated allele "
+                f"at locus {i} despite mutation_rate=0.0")

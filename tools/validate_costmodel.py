@@ -360,8 +360,134 @@ def _print_table(rows) -> None:
             print()
 
 
+def validate_mesh(repeats: int = 5) -> list:
+    """--mesh cells: predicted ``comm_cycles`` of head-partitioned
+    multi-core schedules vs the *measured* wall-time of the collective
+    the mesh lowering actually executes (one psum of per-shard output
+    partials over the model axis — ``serve.distributed_decode.
+    head_parallel_decode_attention``'s only cross-device traffic).
+
+    Three (M, d_model) sizes under the round-robin allocation give the
+    size-scaling ranking cells; a skewed allocation on the largest size
+    is reported predicted-only — the even mesh executes the same
+    balanced collective regardless of DSE-side skew, so pretending to
+    "measure" it would be dishonest.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import accelerator as acc
+    from repro.core import allocation as galloc
+    from repro.core import scheduler as sch
+    from repro.launch.mesh_lowering import mesh_for_cores
+
+    accel = acc.multi_core_array(2)
+    mesh = mesh_for_cores(2)
+    n_heads = 4
+    rr = (0, 1, 0, 1)
+    cells = [(32, 128), (64, 256), (128, 512)]
+    rows: list = []
+
+    def predicted_comm_s(M, E, allocation):
+        workload, schedule = galloc.head_partition_schedule(
+            M, E, n_heads, E // n_heads, allocation)
+        res = sch.evaluate(workload, accel, schedule,
+                           row_block=max(1, M // 64))
+        return res.comm_cycles, res.comm_cycles / accel.frequency_hz
+
+    for M, E in cells:
+        cycles, pred_s = predicted_comm_s(M, E, rr)
+
+        def partial_sum(x):
+            return jax.lax.psum(x, "model")
+
+        fn = shard_map(partial_sum, mesh=mesh,
+                       in_specs=P("model", None, None),
+                       out_specs=P(None, None, None), check_rep=False)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, M, E),
+                              jnp.float32)
+        us = _measure_us(fn, (x,), repeats)
+        rows.append({
+            "name": f"mesh_rr_M{M}_E{E}", "kind": "mesh",
+            "allocation": rr, "M": M, "d_model": E,
+            "predicted_comm_cycles": round(cycles),
+            "predicted_comm_us": round(pred_s * 1e6, 4),
+            "measured_collective_us": round(us, 1),
+        })
+
+    M, E = cells[-1]
+    cycles, pred_s = predicted_comm_s(M, E, (0, 0, 0, 1))
+    rows.append({
+        "name": f"mesh_skew_M{M}_E{E}", "kind": "mesh_predicted_only",
+        "allocation": (0, 0, 0, 1), "M": M, "d_model": E,
+        "predicted_comm_cycles": round(cycles),
+        "predicted_comm_us": round(pred_s * 1e6, 4),
+        "note": "even mesh runs the same balanced psum regardless of "
+                "DSE-side skew; no measured column",
+    })
+    frac, pairs = _concordance(
+        [(r["predicted_comm_us"], r["measured_collective_us"])
+         for r in rows if r["kind"] == "mesh"])
+    rows.append({"name": "mesh_ranking", "kind": "ranking",
+                 "arch": "mesh", "phase": "comm",
+                 "rank_agreement": round(frac, 3), "pairs": pairs})
+    return rows
+
+
+def _print_mesh_table(rows) -> None:
+    hdr = (f"{'cell':22} {'allocation':14} {'pred comm cyc':>13} "
+           f"{'pred us':>9} {'meas us':>9}")
+    print("predicted comm_cycles vs measured collective wall-time "
+          "(2-device host mesh, psum of per-shard output partials):")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["kind"] == "mesh":
+            print(f"{r['name']:22} {str(r['allocation']):14} "
+                  f"{r['predicted_comm_cycles']:13d} "
+                  f"{r['predicted_comm_us']:9.3f} "
+                  f"{r['measured_collective_us']:9.1f}")
+        elif r["kind"] == "mesh_predicted_only":
+            print(f"{r['name']:22} {str(r['allocation']):14} "
+                  f"{r['predicted_comm_cycles']:13d} "
+                  f"{r['predicted_comm_us']:9.3f} {'—':>9}")
+            print(f"  note: {r['note']}")
+    for r in rows:
+        if r["kind"] == "ranking":
+            print(f"schedule-ranking agreement (predicted-more-comm is "
+                  f"measured-slower): {r['rank_agreement']:.3f} over "
+                  f"{r['pairs']} pairs")
+
+
+def _mesh_main(repeats: int) -> None:
+    """Run (or re-exec onto a forced 2-device host and run) the mesh
+    comm-validation cells."""
+    import os
+    import subprocess
+    import sys
+    if jax.device_count() < 2:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count=2"
+                            ).strip()
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--mesh",
+             f"--repeats={repeats}"],
+            env=env, text=True, capture_output=True)
+        sys.stdout.write(out.stdout)
+        sys.stderr.write(out.stderr)
+        sys.exit(out.returncode)
+    _print_mesh_table(validate_mesh(repeats))
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mesh", action="store_true",
+                   help="validate predicted comm_cycles of lowered "
+                        "multi-core schedules against measured "
+                        "collective wall-time on a 2-device host mesh "
+                        "(re-execs itself with forced devices if "
+                        "needed); runs only the mesh cells")
     p.add_argument("--arch", action="append",
                    help="architecture(s) to validate (repeatable; "
                         "default qwen3-8b + starcoder2-7b)")
@@ -375,6 +501,9 @@ def main(argv=None) -> None:
     p.add_argument("--decode-ctx", type=int, action="append")
     p.add_argument("--repeats", type=int, default=3)
     a = p.parse_args(argv)
+    if a.mesh:
+        _mesh_main(a.repeats)
+        return
     rows = validate(
         tuple(a.arch) if a.arch else ("qwen3-8b", "starcoder2-7b"),
         smoke=not a.full, backend=a.backend,
