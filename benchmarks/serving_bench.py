@@ -25,6 +25,18 @@ A second row drives the full engine + admission-controlled batcher on
 a request stream (no interpret overhead: the XLA fallback path) and
 reports end-to-end tokens/s plus steady-state occupancy — slots stay
 leased because eviction and mid-stream insertion overlap decode.
+
+A third row is the paged-KV memory claim made checkable: the same
+request stream served twice — dense engine (every slot owns a
+``max_len`` KV row) vs paged engine (a fixed page pool + free-list
+allocator + preempt/resume under pressure) — with identical tokens
+required.  It reports the peak KV words the allocator actually held
+against the dense batch's allocation (must be <= 0.5x), and the peak
+concurrent requests the page budget sustained against the rows a dense
+cache of the same budget could even allocate (must be >= 1.5x), plus
+the preemption/resume count and the plan-ledger downgrade counts
+(``lengths_downgrades`` must be 0; the paged->masked-dense gather on
+the XLA path is reported honestly, never silently).
 """
 
 import time
@@ -35,7 +47,8 @@ import numpy as np
 
 from repro import configs, lower
 from repro.models import init_params_and_axes
-from repro.serve import (ContinuousBatchingEngine, Request,
+from repro.serve import (ContinuousBatchingEngine,
+                         PagedContinuousBatchingEngine, Request,
                          RequestBatcher, decode_step, init_decode_state,
                          insert, make_serving_plan, prefill_request)
 
@@ -174,8 +187,111 @@ def _engine_stream(arch: str = "qwen3-8b") -> list:
     }]
 
 
+def _request_stream(cfg, n_requests: int, budget: int) -> list:
+    rng = np.random.default_rng(1)
+    return [Request(uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(8, 41))
+                                        ).tolist(),
+                    max_new_tokens=budget)
+            for uid in range(n_requests)]
+
+
+def _ledger_counts(cfg, plan, chunk: int) -> tuple[int, int]:
+    """(lengths_downgrades, paged_dense_gathers) summed over every
+    ExecutionPlan the ServingPlan resolved — decode steps resolve with
+    decode_tokens=1, chunked-prefill chunks with decode_tokens=chunk,
+    so both cache keys are visited; plans are deduplicated by identity
+    (the LRU cache shares them across resolutions)."""
+    plans = {}
+    for phase, n, _bucket, _path, _impl in plan.resolutions:
+        for dt in (1, chunk):
+            exe = lower.resolve_plan(cfg, phase, n, decode_tokens=dt,
+                                     n_blocks=cfg.n_layers)
+            plans[id(exe)] = exe
+    downs = [g for exe in plans.values() for g in exe.downgrades]
+    return (sum(g.count for g in downs if "masked-lengths" in g.reason),
+            sum(g.count for g in downs if "paged KV" in g.reason))
+
+
+def _paged_vs_dense(arch: str = "starcoder2-7b") -> list:
+    cfg = configs.get_config(arch, smoke=True)
+    max_len, batch, budget, chunk = 96, 6, 6, 16
+    page, num_pages = 8, 25          # 24 usable (page 0 is the null page)
+    usable = num_pages - 1
+    n_requests = 9
+    lower.clear_plan_cache()
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+
+    def serve(engine_cls, plan, **kw):
+        eng = engine_cls(params, cfg, batch_size=batch, max_len=max_len,
+                         plan=plan, prefill_chunk=chunk, **kw)
+        b = RequestBatcher(batch_size=batch, eos_id=-1, max_len=max_len)
+        for req in _request_stream(cfg, n_requests, budget):
+            b.submit(req)
+        peak_live, preempts, resumes = [0], [0], [0]
+        orig_step, orig_pre, orig_res = eng.step, None, None
+        eng.step = lambda: (peak_live.__setitem__(
+            0, max(peak_live[0], sum(eng.live))), orig_step())[1]
+        if hasattr(eng, "preempt"):
+            orig_pre, orig_res = eng.preempt, eng.resume
+            eng.preempt = lambda s: (preempts.__setitem__(
+                0, preempts[0] + 1), orig_pre(s))[1]
+            eng.resume = lambda p, s: (resumes.__setitem__(
+                0, resumes[0] + 1), orig_res(p, s))[1]
+        t0 = time.perf_counter()
+        done = b.serve(eng, max_steps=400)
+        wall = time.perf_counter() - t0
+        return eng, done, wall, peak_live[0], preempts[0], resumes[0]
+
+    dense_plan = make_serving_plan(cfg, max_len)
+    _, dense_done, dense_wall, _, _, _ = serve(
+        ContinuousBatchingEngine, dense_plan)
+    dense_tokens = {r.uid: list(r.generated) for r in dense_done}
+
+    paged_plan = make_serving_plan(cfg, max_len, paged=True,
+                                   page_size=page)
+    eng, paged_done, wall, peak_live, preempts, resumes = serve(
+        PagedContinuousBatchingEngine, paged_plan,
+        page_size=page, num_pages=num_pages)
+    paged_tokens = {r.uid: list(r.generated) for r in paged_done}
+
+    # the memory claim: peak words the pool actually held vs the dense
+    # batch's unconditional batch*max_len allocation (per layer: K and
+    # V planes of kv_heads x head_dim, summed over layers)
+    words_per_tok = 2 * cfg.kv_heads * cfg.head_dim * cfg.n_layers
+    kv_dense = batch * max_len * words_per_tok
+    kv_paged = eng.allocator.peak_used * page * words_per_tok
+    # the concurrency claim: at the SAME KV budget (usable pages), a
+    # dense cache can only allocate full max_len rows
+    dense_rows_at_budget = (usable * page) // max_len
+    lengths_downs, paged_gathers = _ledger_counts(cfg, paged_plan, chunk)
+    total = sum(len(r.generated) for r in paged_done)
+    return [{
+        "name": f"serving_paged_vs_dense_{arch}",
+        "batch": batch, "max_len": max_len, "page_size": page,
+        "pool_pages": usable, "requests": n_requests,
+        "completed": len(paged_done), "tokens": total,
+        "tokens_s": round(total / wall, 2),
+        "dense_tokens_s": round(
+            sum(len(r.generated) for r in dense_done) / dense_wall, 2),
+        "kv_dense_words": kv_dense,
+        "kv_paged_words": kv_paged,
+        "kv_memory_ratio": round(kv_paged / kv_dense, 3),
+        "peak_used_pages": eng.allocator.peak_used,
+        "max_concurrent_dense_at_budget": dense_rows_at_budget,
+        "max_concurrent_paged": peak_live,
+        "concurrency_gain": round(peak_live
+                                  / max(dense_rows_at_budget, 1), 2),
+        "preemptions": preempts, "resumes": resumes,
+        "token_parity": paged_tokens == dense_tokens,
+        "lengths_downgrades": lengths_downs,
+        "paged_dense_gathers": paged_gathers,
+    }]
+
+
 def run() -> list:
-    return _mixed_vs_uniform() + _engine_stream()
+    return _mixed_vs_uniform() + _engine_stream() + _paged_vs_dense()
 
 
 if __name__ == "__main__":

@@ -63,6 +63,38 @@ def continuous_batching():
           "(third admitted when a slot freed)")
 
 
+def paged_serving():
+    """The same stream on the paged-KV engine: a fixed page pool
+    bounds KV memory instead of batch * max_len (docs/serving.md keeps
+    this snippet verbatim — tools/check_snippets.py enforces it)."""
+    print("\n=== paged KV: block tables, page-budget admission ===")
+    from repro import configs
+    from repro.models import init_params_and_axes
+    cfg = configs.get_config("qwen3-8b", smoke=True)
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [5, 3, 5, 8, 9, 7]]
+
+    from repro.serve import (PagedContinuousBatchingEngine, Request,
+                             RequestBatcher, make_serving_plan)
+
+    plan = make_serving_plan(cfg, max_len=64, paged=True, page_size=8)
+    engine = PagedContinuousBatchingEngine(
+        params, cfg, batch_size=4, max_len=64, page_size=8,
+        num_pages=13, plan=plan, prefill_chunk=16)
+    batcher = RequestBatcher(batch_size=4, eos_id=-1, max_len=64)
+    for uid, prompt in enumerate(prompts):
+        batcher.submit(Request(uid=uid, prompt=prompt, max_new_tokens=4))
+    finished = batcher.serve(engine, max_steps=64)
+
+    alloc = engine.allocator
+    for r in finished:
+        print(f"  request {r.uid}: {len(r.prompt)} prompt tokens -> "
+              f"generated {r.generated}")
+    print(f"  pool held {alloc.peak_used} of {alloc.num_pages - 1} "
+          f"pages at peak ({alloc.peak_used * alloc.page_size} KV "
+          f"tokens) vs dense {engine.batch_size * engine.max_len}")
+
+
 def run_kernels():
     print("\n=== the same schedules as fused kernels (CPU interpret) ===")
     key = jax.random.PRNGKey(0)
@@ -98,3 +130,4 @@ if __name__ == "__main__":
     explore(256, 256)    # paper: no gain at M == N
     run_kernels()
     continuous_batching()
+    paged_serving()

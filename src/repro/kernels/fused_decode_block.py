@@ -108,6 +108,101 @@ def _kv_index(b, h, j, lens, *, hkv: int, group: int, bk: int):
     return (b * hkv + h // group, jnp.minimum(j, last), 0)
 
 
+def _paged_kv_index(b, h, j, lens, tbl, *, hkv: int, group: int,
+                    page: int):
+    """Block-table indirection for the decode megakernel (grid dim 0 is
+    the batch row): the j-th logical KV page of row b is fetched from
+    pool page ``tbl[b, j]``; skipped iterations clamp to the last live
+    table entry (no fresh DMA), zero-length rows read ``tbl[b, 0]``."""
+    last = jnp.maximum((lens[b] + page - 1) // page - 1, 0)
+    return (tbl[b, jnp.minimum(j, last)] * hkv + h // group, 0, 0)
+
+
+def _paged_decode_block_kernel(len_ref, tbl_ref, x_ref, wq_ref, k_ref,
+                               v_ref, wo_ref, res_ref, o_ref,
+                               q_scr, acc_ref, m_ref, l_ref, y_scr,
+                               **kw):
+    """Paged body == dense body: the table only redirects KV DMAs."""
+    _decode_block_kernel(len_ref, x_ref, wq_ref, k_ref, v_ref, wo_ref,
+                         res_ref, o_ref, q_scr, acc_ref, m_ref, l_ref,
+                         y_scr, **kw)
+
+
+def fused_decode_block_paged(x, wq, k_pool, v_pool, wo, residual,
+                             lengths, block_tables, *, scale=None,
+                             rope_theta=None, interpret: bool = False):
+    """The decode megakernel over a paged KV pool: one Pallas launch for
+    the whole M=1 attention sub-block, with KV fetched page-by-page
+    through a scalar-prefetched block table.
+
+    x, residual: (B, 1, E); wq: (E, Hq, D); k_pool, v_pool:
+    (num_pages, Hkv, page, D[v]); wo: (Hq, Dv, E); lengths: (B,);
+    block_tables: (B, max_pages) int32 page ids.  The KV block size IS
+    the page size; ``num_scalar_prefetch=2`` hands both ``lengths`` and
+    the table to the KV index map, so the indirection is free — each
+    sequential kv step DMAs exactly the one pool page the table names,
+    and pages past ``lengths[b]`` are skipped as in the dense masked
+    kernel.  Returns (B, 1, E) = ``residual + attn_out @ Wo``.
+    """
+    b, sq, e = x.shape
+    assert sq == 1, "fused_decode_block_paged is the M=1 decode schedule"
+    eh, hq, d = wq.shape
+    assert eh == e
+    n_pages, hkv, page, dv = v_pool.shape
+    assert k_pool.shape[:3] == (n_pages, hkv, page)
+    assert page % 8 == 0, "page size must be sublane-aligned (8)"
+    group = hq // hkv
+    assert wo.shape == (hq, dv, e)
+    max_pages = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    bq = 8 if x.dtype == jnp.float32 else 16
+    xr = fa._pad_seq(x, bq, axis=1)
+    rr = fa._pad_seq(residual, bq, axis=1)
+    wqr = jnp.moveaxis(wq, 1, 0)                     # (Hq, E, D)
+    kr = k_pool.reshape(n_pages * hkv, page, d)
+    vr = v_pool.reshape(n_pages * hkv, page, dv)
+    lens = jnp.minimum(lengths.astype(jnp.int32), max_pages * page)
+    tbl = block_tables.astype(jnp.int32)
+
+    kv_index = functools.partial(_paged_kv_index, hkv=hkv, group=group,
+                                 page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, bq, e),
+                         lambda b_, h, j, lens_, tbl_: (b_, 0, 0)),
+            pl.BlockSpec((1, e, d),
+                         lambda b_, h, j, lens_, tbl_: (h, 0, 0)),
+            pl.BlockSpec((1, page, d), kv_index),
+            pl.BlockSpec((1, page, dv), kv_index),
+            pl.BlockSpec((1, dv, e),
+                         lambda b_, h, j, lens_, tbl_: (h, 0, 0)),
+            pl.BlockSpec((1, bq, e),
+                         lambda b_, h, j, lens_, tbl_: (b_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, e),
+                               lambda b_, h, j, lens_, tbl_: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, e), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_block_kernel, scale=scale,
+                          rope_theta=rope_theta),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, bq, e), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(lens, tbl, xr, wqr, kr, vr, wo, rr)
+    return out[:, :1]
+
+
 def fused_decode_block(x, wq, k, v, wo, residual, lengths, *,
                        scale=None, rope_theta=None, block_k: int = 512,
                        interpret: bool = False):

@@ -32,10 +32,15 @@ A ``lengths`` mask (KV-cached decode / chunked prefill) stays on the
 Pallas path: the masked scalar-prefetch kernels
 (``fused_attention_masked`` / ``fused_qproj_attention_masked``) mask
 score tiles in-kernel and skip KV blocks wholly past each row's valid
-prefix.  Only genuinely unsupported calls (non-float dtypes,
-malformed lengths) warn once and fall back to the chunked-XLA path,
-with the concrete reason recorded on the plan's downgrade ledger so
-measured-vs-predicted tables never mislabel the executed path.
+prefix.  A ``block_tables`` argument additionally switches k/v to a
+*paged* pool (``num_pages, Hkv, page, D``) indexed block-table-
+indirectly by the paged kernel variants — the serving engine's
+free-list-allocated KV cache.  Only genuinely unsupported calls
+(non-float dtypes, malformed lengths/tables) warn once *per reason*
+and fall back to the chunked-XLA path (paged calls gather the pool
+dense first), with the concrete reason recorded on the plan's
+downgrade ledger so measured-vs-predicted tables never mislabel the
+executed path.
 """
 
 from __future__ import annotations
@@ -53,12 +58,18 @@ from repro.kernels import xla_fallback as _xla
 from repro.kernels.fused_attention import fused_attention as _pallas_attn
 from repro.kernels.fused_attention import (
     fused_attention_masked as _pallas_attn_masked)
+from repro.kernels.fused_attention import (
+    fused_attention_paged as _pallas_attn_paged)
 from repro.kernels.fused_decode_block import (
     fused_decode_block as _pallas_decode_block)
+from repro.kernels.fused_decode_block import (
+    fused_decode_block_paged as _pallas_decode_block_paged)
 from repro.kernels.fused_qproj_attention import (
     fused_qproj_attention as _pallas_qproj_attn)
 from repro.kernels.fused_qproj_attention import (
     fused_qproj_attention_masked as _pallas_qproj_attn_masked)
+from repro.kernels.fused_qproj_attention import (
+    fused_qproj_attention_paged as _pallas_qproj_attn_paged)
 from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
 from repro.kernels.xla_fallback import ssd_step  # re-export
 from repro.lower import cache as _plan_cache
@@ -104,35 +115,47 @@ def _auto_dispatch(entry: str, sq: int, skv: int, d: int, hq: int,
         return None
 
 
-_warned_lengths_downgrade = False
+#: (kernel, reason) pairs already warned about — per-reason, so e.g. a
+#: lengths downgrade does not suppress the first *paged*-path warning
+#: (each distinct failure mode surfaces exactly once per process).
+_warned_downgrade_reasons: set = set()
 
 
 def reset_lengths_downgrade_warning() -> None:
-    """Re-arm the process-wide warn-once flag of
-    :func:`_downgrade_lengths` (test isolation: the global must not
-    leak a 'already warned' state between tests)."""
-    global _warned_lengths_downgrade
-    _warned_lengths_downgrade = False
+    """Re-arm the per-reason warn-once registry of :func:`_downgrade`
+    (test isolation: the registry must not leak an 'already warned'
+    state between tests)."""
+    _warned_downgrade_reasons.clear()
+
+
+def _downgrade(plan, reason: str, *, kernel: str) -> str:
+    """pallas -> xla when a call cannot take the named Pallas kernel:
+    warn once per (kernel, reason) and record the concrete *reason* on
+    the plan (if any) so validation tables label the measured path
+    truthfully."""
+    key = (kernel, reason)
+    if key not in _warned_downgrade_reasons:
+        warnings.warn(
+            f"attention: call cannot take the {kernel} ({reason}); "
+            "downgrading impl='pallas' to the chunked-XLA streaming "
+            "path (recorded on the ExecutionPlan)", stacklevel=4)
+        _warned_downgrade_reasons.add(key)
+    if plan is not None:
+        plan.plan.record_downgrade(
+            f"{kernel} unavailable: {reason}", plan.path, plan.path)
+    return "xla"
 
 
 def _downgrade_lengths(plan, reason: str) -> str:
-    """pallas -> xla when a ``lengths``-masked call cannot take the
-    masked Pallas kernel: warn once process-wide and record the
-    concrete *reason* on the plan (if any) so validation tables label
-    the measured path truthfully."""
-    global _warned_lengths_downgrade
-    if not _warned_lengths_downgrade:
-        warnings.warn(
-            "attention: masked-lengths call cannot take the masked "
-            f"Pallas kernel ({reason}); downgrading impl='pallas' to "
-            "the chunked-XLA streaming path (recorded on the "
-            "ExecutionPlan)", stacklevel=3)
-        _warned_lengths_downgrade = True
-    if plan is not None:
-        plan.plan.record_downgrade(
-            f"masked-lengths Pallas kernel unavailable: {reason}",
-            plan.path, plan.path)
-    return "xla"
+    return _downgrade(plan, reason,
+                      kernel="masked-lengths Pallas kernel")
+
+
+def _downgrade_paged(plan, reason: str) -> str:
+    """The honest paged->masked-dense downgrade: the fallback gathers
+    the pool dense through the table, then runs the lengths-masked
+    chunked-XLA path."""
+    return _downgrade(plan, reason, kernel="paged-KV Pallas kernel")
 
 
 _MASKED_DTYPES = ("float32", "bfloat16", "float16")
@@ -184,6 +207,28 @@ def _masked_unsupported(x, lengths, causal: bool, q_offset,
     return None
 
 
+def _paged_unsupported(x, lengths, block_tables, causal: bool, q_offset,
+                       sq: int, page: int) -> Optional[str]:
+    """Reason string when the paged Pallas kernels cannot serve this
+    call, else None.  Paged kernels inherit every masked-kernel
+    constraint (they share the kernel body) plus the block-table
+    contract: a 2-D integral (B, max_pages) table and a sublane-aligned
+    page size."""
+    if lengths is None:
+        return "paged call without lengths (the table has no row depth)"
+    if getattr(block_tables, "ndim", 0) != 2:
+        return ("block_tables must be (B, max_pages), got shape "
+                f"{getattr(block_tables, 'shape', None)}")
+    if not jnp.issubdtype(jnp.asarray(block_tables).dtype, jnp.integer):
+        return f"block_tables must be integral, got {block_tables.dtype}"
+    if block_tables.shape[0] != lengths.shape[0]:
+        return (f"block_tables rows {block_tables.shape[0]} != "
+                f"lengths rows {lengths.shape[0]}")
+    if page % 8:
+        return f"page size {page} not sublane-aligned (8)"
+    return _masked_unsupported(x, lengths, causal, q_offset, sq)
+
+
 def _resolve(entry: str, impl: str, plan, sq: int, skv: int, d: int,
              hq: int, hkv: int, lengths, block_q, block_k, interpret):
     """Shared impl/tiling resolution for the attention entry points.
@@ -212,6 +257,7 @@ def attention(q, k, v, *, causal: bool = True,
               scale: Optional[float] = None,
               q_offset: Optional[int] = None,
               lengths: Optional[jax.Array] = None,
+              block_tables: Optional[jax.Array] = None,
               impl: str = "auto",
               block_q: Optional[int] = None,
               block_k: Optional[int] = None,
@@ -231,8 +277,42 @@ def attention(q, k, v, *, causal: bool = True,
     path with the reason warned once + recorded on the plan.
     ``plan``: a resolved ``lower.runtime.PlanDispatch``; wins over the
     auto resolution and receives downgrade records.
+
+    ``block_tables``: (B, max_pages) int32 page ids — k and v are then
+    the *page pools* (num_pages, Hkv, page, D[v]) instead of dense
+    caches, indexed block-table-indirectly by the paged Pallas kernel
+    (``lengths`` required).  Unsupported paged calls gather the pool
+    dense and take the masked chunked-XLA path, with the paged->masked-
+    dense downgrade warned + recorded.
     """
     b, hq, sq, d = q.shape
+    if block_tables is not None:
+        if lengths is None:
+            raise ValueError("paged attention requires lengths")
+        n_pages, hkv, page, dv = v.shape
+        skv = block_tables.shape[1] * page
+        impl, block_q, block_k, interpret, plan = _resolve(
+            "attention", impl, plan, sq, skv, d, hq, hkv, lengths,
+            block_q, block_k, interpret)
+        if impl == "pallas":
+            reason = _paged_unsupported(q, lengths, block_tables,
+                                        causal, q_offset, sq, page)
+            if reason is not None:
+                impl = _downgrade_paged(plan, reason)
+            else:
+                return _pallas_attn_paged(
+                    q, k, v, lengths, block_tables, causal=causal,
+                    scale=scale, block_q=block_q, interpret=interpret)
+        if impl == "xla":
+            return _xla.paged_chunked_attention(
+                q, k, v, lengths, block_tables, causal=causal,
+                scale=scale, q_offset=q_offset, block_q=block_q,
+                block_k=block_k)
+        if impl == "reference":
+            return _ref.paged_attention_reference(
+                q, k, v, lengths, block_tables, causal=causal,
+                scale=scale, q_offset=q_offset)
+        raise ValueError(f"unknown impl {impl!r}")
     skv, hkv = k.shape[2], k.shape[1]
     impl, block_q, block_k, interpret, plan = _resolve(
         "attention", impl, plan, sq, skv, d, hq, hkv, lengths,
@@ -263,6 +343,7 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
                     scale: Optional[float] = None,
                     q_offset: Optional[int] = None,
                     lengths: Optional[jax.Array] = None,
+                    block_tables: Optional[jax.Array] = None,
                     rope_theta: Optional[float] = None,
                     impl: str = "auto",
                     block_q: Optional[int] = None,
@@ -276,9 +357,45 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
     embedding to Q *between* projection and scores — in-register inside
     the Pallas kernels (row r sits at ``q_offset + r``, or
     ``lengths[b] - Sq + r`` on the masked path), on the materialised Q
-    in the fallbacks."""
+    in the fallbacks.  ``block_tables``: (B, max_pages) page ids — k, v
+    become pools (num_pages, Hkv, page, D[v]); see :func:`attention`."""
     b, sq, e = x.shape
     hq, d = wq.shape[1], wq.shape[-1]
+    if block_tables is not None:
+        if lengths is None:
+            raise ValueError("paged qproj_attention requires lengths")
+        n_pages, hkv, page, dv = v.shape
+        skv = block_tables.shape[1] * page
+        impl, block_q, block_k, interpret, plan = _resolve(
+            "qproj_attention", impl, plan, sq, skv, d, hq, hkv, lengths,
+            block_q, block_k, interpret)
+        if impl == "pallas":
+            reason = _paged_unsupported(x, lengths, block_tables,
+                                        causal, q_offset, sq, page)
+            if reason is not None:
+                impl = _downgrade_paged(plan, reason)
+            else:
+                return _pallas_qproj_attn_paged(
+                    x, wq, k, v, lengths, block_tables, causal=causal,
+                    scale=scale, rope_theta=rope_theta, block_q=block_q,
+                    interpret=interpret)
+        if impl == "reference":
+            return _ref.paged_qproj_attention_reference(
+                x, wq, k, v, lengths, block_tables, causal=causal,
+                scale=scale, rope_theta=rope_theta, q_offset=q_offset)
+        if impl == "xla":
+            kd = _xla.gather_paged_kv(k, block_tables)
+            vd = _xla.gather_paged_kv(v, block_tables)
+            q = jnp.einsum("bse,ehd->bhsd", x, wq.astype(x.dtype))
+            if rope_theta is not None:
+                pos = _ref.rope_positions(sq, skv, lengths=lengths,
+                                          q_offset=q_offset)
+                q = _ref.rope(q, pos, rope_theta)
+            return _xla.chunked_attention(
+                q, kd, vd, causal=causal, scale=scale,
+                q_offset=q_offset, lengths=lengths, block_q=block_q,
+                block_k=block_k)
+        raise ValueError(f"unknown impl {impl!r}")
     skv, hkv = k.shape[2], k.shape[1]
     impl, block_q, block_k, interpret, plan = _resolve(
         "qproj_attention", impl, plan, sq, skv, d, hq, hkv, lengths,
@@ -313,6 +430,7 @@ def qproj_attention(x, wq, k, v, *, causal: bool = True,
 
 
 def decode_block(x, wq, k, v, wo, residual, lengths, *,
+                 block_tables: Optional[jax.Array] = None,
                  scale: Optional[float] = None,
                  rope_theta: Optional[float] = None,
                  impl: str = "auto",
@@ -329,15 +447,46 @@ def decode_block(x, wq, k, v, wo, residual, lengths, *,
     wo: (Hq, Dv, E); lengths: (B,).  Returns (B, 1, E) =
     ``residual + attn_out @ Wo``.  Non-Pallas impls compose the same
     math from the streaming-XLA / reference pieces (identical numerics,
-    more HBM round-trips)."""
+    more HBM round-trips).  ``block_tables``: (B, max_pages) page ids —
+    k, v become pools (num_pages, Hkv, page, D[v]) and the one-launch
+    kernel fetches KV page-by-page through the table."""
     b, sq, e = x.shape
     assert sq == 1, "decode_block is the M=1 decode schedule"
     hq, d = wq.shape[1], wq.shape[-1]
-    skv, hkv = k.shape[2], k.shape[1]
-    dv = v.shape[-1]
-    impl, _, block_k, interpret, plan = _resolve(
-        "decode_block", impl, plan, sq, skv, d, hq, hkv, lengths,
-        None, block_k, interpret)
+    if block_tables is not None:
+        if lengths is None:
+            raise ValueError("paged decode_block requires lengths")
+        n_pages, hkv, page, dv = v.shape
+        skv = block_tables.shape[1] * page
+        impl, _, block_k, interpret, plan = _resolve(
+            "decode_block", impl, plan, sq, skv, d, hq, hkv, lengths,
+            None, block_k, interpret)
+        if impl == "pallas":
+            reason = _paged_unsupported(x, lengths, block_tables,
+                                        False, None, sq, page)
+            if reason is not None:
+                impl = _downgrade_paged(plan, reason)
+            else:
+                return _pallas_decode_block_paged(
+                    x, wq, k, v, wo, residual, lengths, block_tables,
+                    scale=scale, rope_theta=rope_theta,
+                    interpret=interpret)
+        if impl == "reference":
+            return _ref.paged_decode_block_reference(
+                x, wq, k, v, wo, residual, lengths, block_tables,
+                rope_theta=rope_theta, scale=scale)
+        if impl == "xla":
+            k = _xla.gather_paged_kv(k, block_tables)
+            v = _xla.gather_paged_kv(v, block_tables)
+            block_tables = None     # fall through to the dense XLA path
+        if impl not in ("xla",):
+            raise ValueError(f"unknown impl {impl!r}")
+    else:
+        skv, hkv = k.shape[2], k.shape[1]
+        dv = v.shape[-1]
+        impl, _, block_k, interpret, plan = _resolve(
+            "decode_block", impl, plan, sq, skv, d, hq, hkv, lengths,
+            None, block_k, interpret)
     if impl == "pallas":
         reason = _masked_unsupported(x, lengths, False, None, sq)
         if reason is not None:

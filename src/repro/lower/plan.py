@@ -240,6 +240,25 @@ class ExecutionPlan:
     def predicted_peak_words(self) -> int:
         return self.predict().peak_active_words
 
+    def predicted_kv_pages(self, row_lens, page_size: int) -> int:
+        """Predicted peak KV *pages* for rows at contexts ``row_lens``
+        under a paged cache with ``page_size``-token pages: each live
+        row owns ``ceil(len / page_size)`` pages and nothing else — the
+        checkable form of the cost model's memory claim (a dense cache
+        would hold ``max_len`` tokens per row regardless of ``len``).
+        The serving engine's allocator stats are compared against this
+        by ``tools/validate_costmodel.py --memory``."""
+        return sum(-(-int(l) // page_size)
+                   for l in row_lens if int(l) > 0)
+
+    def predicted_kv_page_words(self, row_lens, page_size: int,
+                                n_kv_heads: int, head_dim: int,
+                                n_layers: int = 1) -> int:
+        """The page prediction in words: K and V planes of every
+        allocated page across ``n_layers`` layers."""
+        pages = self.predicted_kv_pages(row_lens, page_size)
+        return pages * page_size * 2 * n_kv_heads * head_dim * n_layers
+
     def block_skip_fraction(self, row_lens) -> float:
         """Predicted fraction of per-row KV block iterations the
         masked kernels skip for one decode step over rows at contexts

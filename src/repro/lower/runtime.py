@@ -60,6 +60,8 @@ class PlanDispatch:
     block_q: int
     block_k: int
     interpret: bool = False
+    paged: bool = False         # call site passes a KV page pool +
+    #                             block tables instead of dense caches
 
     @property
     def fuse_q(self) -> bool:
@@ -81,7 +83,8 @@ class PlanDispatch:
 def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
              interpret: bool = False, entry: str = "attention",
              rope: bool = False, qk_norm: bool = False,
-             lengths_masked: bool = False) -> PlanDispatch:
+             lengths_masked: bool = False,
+             paged: bool = False) -> PlanDispatch:
     """Legalise ``plan`` for one call site.
 
     Args:
@@ -106,6 +109,16 @@ def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
                  and skip KV blocks past each row's valid prefix, so
                  fused paths keep their planned impl — a note is left
                  on the plan, never a downgrade.
+        paged:   the call site stores KV as a page pool + (B, max_pages)
+                 block tables (the serving engine's free-list cache).
+                 On a Pallas impl this is **legal**: the paged kernel
+                 variants scalar-prefetch the table and index KV
+                 through it (a note, never a downgrade).  On any other
+                 impl the pool must be gathered dense before the masked
+                 path runs — recorded as the honest paged->masked-dense
+                 downgrade (the dispatch stays ``paged`` so the call
+                 site still passes its tables; ``kernels.ops`` does the
+                 gather).
     """
     path = plan.kernel_path
     if path == DECODE_MEGAKERNEL:
@@ -145,10 +158,20 @@ def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
         plan.note("masked-lengths calls take the scalar-prefetch "
                   "masked Pallas kernels (KV blocks past each row's "
                   "valid prefix skipped)")
+    if paged:
+        if impl == "pallas":
+            plan.note("paged KV: block-table-indirect Pallas kernels "
+                      "(scalar-prefetched page table drives the KV "
+                      "DMAs; skipped pages issue none)")
+        else:
+            plan.record_downgrade(
+                f"paged KV block tables unsupported on impl "
+                f"'{impl}': pool gathered to masked-dense",
+                path, path)
     t = plan.tiling
     return PlanDispatch(plan=plan, path=path, impl=impl,
                         block_q=t.block_q, block_k=t.block_kv,
-                        interpret=interpret)
+                        interpret=interpret, paged=paged)
 
 
 @dataclasses.dataclass
@@ -166,6 +189,8 @@ class ServingPlan:
     backend: str = "cpu"
     interpret: bool = False
     n_blocks: int = 1
+    paged: bool = False             # KV stored as page pool + tables
+    page_size: Optional[int] = None
     resolutions: list = dataclasses.field(default_factory=list)
 
     @property
@@ -197,7 +222,7 @@ class ServingPlan:
                      entry=entry,
                      rope=getattr(self.cfg, "rope_theta", 0) > 0,
                      qk_norm=getattr(self.cfg, "qk_norm", False),
-                     lengths_masked=True)
+                     lengths_masked=True, paged=self.paged)
         self.resolutions.append((phase, n, plan.bucket, d.path, d.impl))
         return d
 
@@ -257,13 +282,24 @@ class ServingPlan:
 
 def serving_plan(cfg, max_len: int, *, backend: str = "cpu",
                  interpret: bool = False,
-                 n_blocks: Optional[int] = None) -> Optional[ServingPlan]:
+                 n_blocks: Optional[int] = None,
+                 paged: bool = False,
+                 page_size: Optional[int] = None
+                 ) -> Optional[ServingPlan]:
     """Build the ServingPlan for ``cfg``, or None when the config is
     not lowerable (MLA/SSM/hybrid blocks) — the serving engine then
-    keeps its config-driven dispatch."""
+    keeps its config-driven dispatch.  ``paged``/``page_size``: the
+    engine stores KV as a free-list page pool + block tables; every
+    dispatch is then legalised on the ``paged`` axis (Pallas impls take
+    the block-table-indirect kernels, others record the honest
+    paged->masked-dense downgrade)."""
     if not lowering.supported(cfg):
         return None
     if n_blocks is None:
         n_blocks = getattr(cfg, "n_layers", 1) or 1
+    if paged and page_size is not None and max_len % page_size:
+        raise ValueError(
+            f"max_len {max_len} not a multiple of page_size {page_size}")
     return ServingPlan(cfg=cfg, max_len=max_len, backend=backend,
-                       interpret=interpret, n_blocks=n_blocks)
+                       interpret=interpret, n_blocks=n_blocks,
+                       paged=paged, page_size=page_size)

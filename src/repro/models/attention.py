@@ -118,6 +118,7 @@ def _cache_write(cache_len, b: int, s: int):
 def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
+                block_tables: Optional[jax.Array] = None,
                 interpret: bool = False,
                 plan=None,
                 residual: Optional[jax.Array] = None):
@@ -130,10 +131,27 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
     ``residual``: the block's skip input; when given, the returned
     output already includes it (the megakernel folds the add into the
     launch; other paths add it here), so the caller must not add it
-    again."""
+    again.
+
+    ``block_tables``: (B, max_pages) int32 page ids — the cache leaves
+    are then page *pools* (num_pages, Hkv, page, Dh) instead of dense
+    per-row buffers.  The append becomes a page-indirect scatter: row
+    b's new token lands in pool page
+    ``block_tables[b, cache_len[b] // page]`` at offset
+    ``cache_len[b] % page``, and attention reads KV back through the
+    same table (the paged kernels / gather fallback in kernels.ops).
+    Dead rows (zeroed table, cache_len 0) write into the allocator's
+    reserved null page 0, whose content no live row ever reads.
+    Single-token per-row decode only — prefill stays dense-side and is
+    paged at ``insert()`` time by the serving engine."""
     dt = x.dtype
     b, s, _ = x.shape
     decode = cache is not None
+    paged = block_tables is not None
+    if paged and not decode:
+        raise NotImplementedError(
+            "paged KV is a decode-time storage format; prefill runs "
+            "dense and is paged at insert() time")
     impl, bq, bk, interpret = _plan_kernel_args(cfg, plan, interpret)
     from repro.sharding import rules as _shrules
     dist = decode and cfg.distributed_decode and s == 1 \
@@ -173,7 +191,24 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
 
     if decode:
         starts, lengths, q_off, per_row = _cache_write(cache_len, b, s)
-        if per_row:
+        if paged:
+            if not per_row:
+                raise NotImplementedError(
+                    "paged KV requires per-row (B,) cache_len")
+            if hp or dist:
+                raise NotImplementedError(
+                    "paged KV does not compose with the distributed "
+                    "decode paths yet")
+            # page-indirect append: advanced indices (page_ids, offs)
+            # land row b's single new token inside its current page
+            page = cache["k"].shape[2]
+            page_ids = block_tables[jnp.arange(b), starts // page]
+            offs = starts % page
+            k_buf = cache["k"].at[page_ids, :, offs].set(
+                k_new[:, :, 0, :].astype(cache["k"].dtype))
+            v_buf = cache["v"].at[page_ids, :, offs].set(
+                v_new[:, :, 0, :].astype(cache["v"].dtype))
+        elif per_row:
             # continuous batching: each row appends at its own valid
             # length (a vmapped scatter), and the per-row lengths flow
             # straight into the masked kernels
@@ -213,18 +248,21 @@ def gqa_forward(params, cfg: ModelConfig, x, positions, *,
                 out = ops.decode_block(
                     x, wq, k_buf.astype(dt), v_buf.astype(dt),
                     params["wo"].astype(dt), residual, lengths,
+                    block_tables=block_tables,
                     rope_theta=theta, impl=impl, block_k=bk,
                     interpret=interpret, plan=plan)
                 return out, new_cache
             o = ops.qproj_attention(
                 x, wq, k_buf.astype(dt), v_buf.astype(dt),
                 causal=cfg.causal, q_offset=q_off, lengths=lengths,
+                block_tables=block_tables,
                 rope_theta=theta, impl=impl, block_q=bq, block_k=bk,
                 interpret=interpret, plan=plan)
         else:
             o = ops.attention(q, k_buf.astype(dt), v_buf.astype(dt),
                               causal=cfg.causal, q_offset=q_off,
                               lengths=lengths,
+                              block_tables=block_tables,
                               impl=impl, block_q=bq, block_k=bk,
                               interpret=interpret, plan=plan)
     else:
@@ -295,6 +333,7 @@ def _mla_latent(params, cfg, x, positions, dt):
 def mla_forward(params, cfg: ModelConfig, x, positions, *,
                 cache: Optional[dict] = None,
                 cache_len: Optional[jax.Array] = None,
+                block_tables: Optional[jax.Array] = None,
                 interpret: bool = False,
                 plan=None,
                 residual: Optional[jax.Array] = None):
@@ -305,6 +344,9 @@ def mla_forward(params, cfg: ModelConfig, x, positions, *,
     kernel args when a caller resolved one by hand.  ``residual`` is
     folded into the returned output (same contract as
     :func:`gqa_forward`; no megakernel path here)."""
+    if block_tables is not None:
+        raise NotImplementedError(
+            "paged KV is not supported for MLA latent caches")
     dt = x.dtype
     b, s, _ = x.shape
     impl, bq, bk, interpret = _plan_kernel_args(cfg, plan, interpret)

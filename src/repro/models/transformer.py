@@ -102,7 +102,8 @@ def init_model(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _layer_forward(lp, cfg: ModelConfig, i_kind: tuple, x, positions,
-                   layer_cache, cache_len, interpret, plan=None):
+                   layer_cache, cache_len, interpret, plan=None,
+                   block_tables=None):
     block_kind, ffn_kind = i_kind
     aux = {}
     h = rms_norm(x, lp["pre_norm"])
@@ -114,7 +115,7 @@ def _layer_forward(lp, cfg: ModelConfig, i_kind: tuple, x, positions,
             lp["attn"], cfg, h, positions,
             cache=None if layer_cache is None else layer_cache.get("attn"),
             cache_len=cache_len, interpret=interpret, plan=plan,
-            residual=x)
+            residual=x, block_tables=block_tables)
         new_cache = None if layer_cache is None else {"attn": new_attn_cache}
     else:
         h, new_mamba_cache = mb.mamba_forward(
@@ -142,7 +143,7 @@ def _kinds(cfg: ModelConfig, i: int) -> tuple:
 def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
             cache=None, cache_len=None, positions=None,
             interpret: bool = False, return_aux: bool = False,
-            plan=None):
+            plan=None, block_tables=None):
     """tokens: (B, S) int32 and/or embeds: (B, S_f, frontend_dim)
     (stub modality frontend, prepended).  cache/cache_len: decode mode;
     ``cache_len`` is either a scalar (whole batch at one uniform
@@ -151,8 +152,11 @@ def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
     ``plan``: a ``lower.runtime.PlanDispatch`` routing every attention
     block through its DSE-assigned kernel path (blocks are identical,
     so one per-block record covers the scanned body — asserted at
-    lowering time).  Returns logits (+ new cache if cache given)
-    (+ aux if asked)."""
+    lowering time).
+    ``block_tables``: (B, max_pages) int32 page table for paged KV
+    caches; shared by all layers, so it enters the scanned body as a
+    closure constant (scan-invariant), never a scanned input.
+    Returns logits (+ new cache if cache given) (+ aux if asked)."""
     parts = []
     if embeds is not None:
         fp = params["frontend_proj"]
@@ -187,7 +191,8 @@ def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
     for i, lp in enumerate(params["prefix_layers"]):
         lc = None if cache is None else cache["prefix"][i]
         x, nc, aux = _layer_forward(lp, cfg, _kinds(cfg, i), x, positions,
-                                    lc, cache_len, interpret, plan)
+                                    lc, cache_len, interpret, plan,
+                                    block_tables)
         new_prefix_caches.append(nc)
         add_aux(aux)
 
@@ -205,7 +210,7 @@ def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
             lc = None if layer_caches is None else layer_caches[pos]
             x, nc, aux = _layer_forward(
                 layer_params[pos], cfg, kinds[pos], x, positions, lc,
-                cache_len, interpret, plan)
+                cache_len, interpret, plan, block_tables)
             new_caches.append(nc)
             for k in aux_acc:
                 if k in aux:

@@ -1,13 +1,20 @@
 from repro.serve.engine import (ContinuousBatchingEngine, DecodeState,
-                                PrefillResult, chunked_prefill,
-                                decode_step, evict, greedy_sample,
-                                init_decode_state, insert,
-                                make_serving_plan, prefill,
-                                prefill_request, serve_step)
+                                OutOfPages, PageAllocator,
+                                PagedContinuousBatchingEngine,
+                                PagedDecodeState, PrefillResult,
+                                PreemptedRequest, chunked_prefill,
+                                decode_step, evict, evict_paged,
+                                greedy_sample, init_decode_state,
+                                init_paged_decode_state, insert,
+                                insert_paged, make_serving_plan,
+                                prefill, prefill_request, serve_step)
 from repro.serve.batcher import Request, RequestBatcher
 
-__all__ = ["ContinuousBatchingEngine", "DecodeState", "PrefillResult",
-           "chunked_prefill", "decode_step", "evict", "greedy_sample",
-           "init_decode_state", "insert", "make_serving_plan",
-           "prefill", "prefill_request", "serve_step",
-           "Request", "RequestBatcher"]
+__all__ = ["ContinuousBatchingEngine", "DecodeState", "OutOfPages",
+           "PageAllocator", "PagedContinuousBatchingEngine",
+           "PagedDecodeState", "PrefillResult", "PreemptedRequest",
+           "chunked_prefill", "decode_step", "evict", "evict_paged",
+           "greedy_sample", "init_decode_state",
+           "init_paged_decode_state", "insert", "insert_paged",
+           "make_serving_plan", "prefill", "prefill_request",
+           "serve_step", "Request", "RequestBatcher"]

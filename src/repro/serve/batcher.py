@@ -25,6 +25,20 @@ Admission rules:
   ``max_len - 1`` tokens is admitted with its generation budget
   clamped to 1.  Budgets are always clamped so prompt + generated
   never overruns a cache row.
+
+Paged engines (``engine.allocator`` present) add two rules:
+
+* admission is by free-*page* budget, not just free slots — the queue
+  head is admitted only when the pool can hold its prompt plus one
+  decoded token, and the lease reserves those pages on the spot so
+  back-to-back admissions each see the true remaining pool (strict
+  FIFO: an oversized head blocks, it is never jumped);
+* under page pressure (a live row about to cross a page boundary with
+  the free list empty) the *newest* lease is preempted — its KV pages
+  snapshot to host memory and return to the pool — and the request
+  rejoins the queue front, resuming bit-identically once pages free
+  up.  The newest lease has the least sunk work, and front-of-queue
+  re-admission preserves FIFO order among the preempted.
 """
 
 from __future__ import annotations
@@ -43,6 +57,10 @@ class Request:
     max_new_tokens: int = 32
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # a PreemptedRequest snapshot while the request sits re-queued
+    # after preemption (None otherwise): the next lease resumes it
+    # instead of re-prefilling
+    paused: object = None
 
 
 class RequestBatcher:
@@ -78,17 +96,35 @@ class RequestBatcher:
     def _n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    def _fill_slots(self) -> list:
+    def _admit_one(self, can_admit: Optional[Callable] = None
+                   ) -> Optional[int]:
+        """Admit the queue *head* into the lowest free slot (or return
+        None).  ``can_admit(req)`` — the paged engine's free-page check
+        — gates the head: a head that cannot be admitted blocks the
+        queue, strict FIFO, no jumping.  One request at a time so the
+        caller can take its page reservation before the next head is
+        checked against the (then-smaller) free list."""
+        if not self.queue or self._n_active() >= self.max_concurrency:
+            return None
+        if can_admit is not None and not can_admit(self.queue[0]):
+            return None
+        for i in range(self.batch_size):
+            if self.slots[i] is None:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.slot_lens[i] = len(req.prompt) + len(req.generated)
+                return i
+        return None
+
+    def _fill_slots(self, can_admit: Optional[Callable] = None) -> list:
         """Admit queued requests into free slots, FIFO, stopping at the
         ``max_concurrency`` budget.  Returns the newly leased slots."""
         newly = []
-        for i in range(self.batch_size):
-            if not self.queue or self._n_active() >= self.max_concurrency:
+        while True:
+            i = self._admit_one(can_admit)
+            if i is None:
                 break
-            if self.slots[i] is None:
-                self.slots[i] = self.queue.popleft()
-                self.slot_lens[i] = len(self.slots[i].prompt)
-                newly.append(i)
+            newly.append(i)
         return newly
 
     @property
@@ -139,17 +175,63 @@ class RequestBatcher:
             steps += 1
         return self.finished
 
+    def _relieve_page_pressure(self, engine) -> list:
+        """Preempt newest leases until the next decode step fits the
+        free page list.  Preempted requests rejoin the queue *front*
+        (newest-preempted first, so the front stays oldest-first) with
+        their KV snapshot stashed on ``req.paused``.  Returns the
+        preempted slots."""
+        preempted = []
+        while engine.step_page_deficit() > 0:
+            live = [i for i in range(self.batch_size)
+                    if self.slots[i] is not None and engine.live[i]]
+            if len(live) <= 1:
+                break   # a lone request must run (or hit OutOfPages)
+            victim = max(live, key=lambda i: engine.lease_order[i])
+            req = self.slots[victim]
+            req.paused = engine.preempt(victim)
+            self.slots[victim] = None
+            self.slot_lens[victim] = 0
+            self.queue.appendleft(req)
+            preempted.append(victim)
+        return preempted
+
     def serve(self, engine, max_steps: int = 1000) -> list:
         """Drive a :class:`~repro.serve.engine.ContinuousBatchingEngine`
         to completion (or ``max_steps``): admit queued requests into
         free engine slots (FIFO, budgeted), let the engine prefill and
         insert them mid-stream, feed decoded tokens back per slot, and
         evict rows the moment they finish so the next request can take
-        the slot — the decode loop never stops for admission."""
+        the slot — the decode loop never stops for admission.
+
+        A paged engine (``engine.allocator``) adds page-budget
+        admission, preempt-newest under page pressure, and snapshot
+        resume (no prefill recompute) when a preempted request is
+        re-leased."""
+        paged = getattr(engine, "allocator", None) is not None
+        can_admit = None
+        if paged:
+            def can_admit(req):
+                if req.paused is not None:
+                    return engine.can_resume(req.paused)
+                return engine.can_admit_tokens(len(req.prompt))
         steps = 0
         while (self.active or engine._pending) and steps < max_steps:
-            for slot in self._fill_slots():
-                engine.begin_prefill(slot, self.slots[slot].prompt)
+            # lease-and-reserve one request at a time: the engine's
+            # begin_prefill/resume takes its pages before the next
+            # head is checked against the remaining free list
+            while True:
+                slot = self._admit_one(can_admit)
+                if slot is None:
+                    break
+                req = self.slots[slot]
+                if req.paused is not None:
+                    engine.resume(req.paused, slot)
+                    req.paused = None
+                else:
+                    engine.begin_prefill(slot, req.prompt)
+            if paged:
+                self._relieve_page_pressure(engine)
             tokens, inserted = engine.step()
             # a request's first token is sampled by its prefill
             for slot, first in inserted:

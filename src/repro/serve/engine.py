@@ -38,6 +38,24 @@ mirrors of per-slot state so step dispatch never reads device memory.
 
 Caches: GQA k/v ring, MLA latent (B,S,576), Mamba conv+state.
 
+Paged KV: :class:`PagedContinuousBatchingEngine` swaps the dense
+per-row cache for page *pools* — per-layer ``(num_pages, Hkv, page,
+Dh)`` buffers plus one ``(B, max_pages)`` int32 block table shared by
+every layer — managed by a host-side :class:`PageAllocator` (free
+list; page 0 is a reserved null page that dead rows harmlessly
+reference).  KV memory is then bounded by the *pool*, not by
+``batch * max_len``: rows only hold the pages their actual depth
+needs.  Admission *reserves* the prompt's pages (plus the first
+decoded token's) at lease time — a chunked prefill spans several
+scheduler steps while live rows keep growing, so without the
+reservation the admission check would not be binding and a finished
+prefill could find the pool drained at insert.  Past that, a page is
+allocated the step a row's context crosses a page boundary, and the
+whole list is freed on evict.  Preemption falls out:
+``preempt(slot)`` snapshots the row's pages + position to host memory
+and frees them; ``resume`` scatters the snapshot into fresh pages and
+the request continues bit-identically — no recompute.
+
 ``serve_step`` is what the dry-run lowers for decode_* shapes: one new
 token against a seq_len-deep cache.
 """
@@ -64,13 +82,17 @@ class DecodeState:
 
 
 def make_serving_plan(cfg: ModelConfig, max_len: int, *,
-                      interpret: bool = False):
+                      interpret: bool = False, paged: bool = False,
+                      page_size: Optional[int] = None):
     """The ServingPlan for ``cfg`` (None when the config is not
     lowerable — MLA/SSM; serving then keeps config-driven dispatch).
-    Resolved here so serve callers never touch jax backend strings."""
+    Resolved here so serve callers never touch jax backend strings.
+    ``paged``/``page_size``: resolve the plan for paged-KV dispatch
+    (the block-table axis of every bucket's PlanDispatch)."""
     from repro.lower import serving_plan
     return serving_plan(cfg, max_len, backend=jax.default_backend(),
-                        interpret=interpret)
+                        interpret=interpret, paged=paged,
+                        page_size=page_size)
 
 
 def init_decode_state(cfg: ModelConfig, batch: int,
@@ -149,7 +171,7 @@ def chunked_prefill(params, cfg: ModelConfig, tokens,
 
 def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
                 plan=None, dispatch=None, active=None,
-                interpret: bool = False
+                block_tables=None, interpret: bool = False
                 ) -> tuple[DecodeState, jax.Array]:
     """One token for every row (M=1: the paper's M<N schedule regime).
 
@@ -167,6 +189,9 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
     (B,) bool; rows where it is False keep their ``cache_len`` and
     ``last_token`` (free slots ride along in the batch without
     advancing — their lane's output is computed and discarded).
+    ``block_tables``: (B, max_pages) int32 page table when ``state``
+    is paged (pool-shaped cache leaves); the state dataclass is
+    preserved either way.
     """
     if dispatch is None and plan is not None:
         ctx = plan.concrete_ctx(state.cache_len) + 1
@@ -174,15 +199,16 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, *,
     logits, new_cache = tf.forward(
         params, cfg, tokens=state.last_token[:, None],
         cache=state.cache, cache_len=state.cache_len,
-        interpret=interpret, plan=dispatch)
+        interpret=interpret, plan=dispatch, block_tables=block_tables)
     nxt = greedy_sample(logits)
     step = jnp.ones_like(state.cache_len)
     if active is not None:
         act = jnp.asarray(active)
         nxt = jnp.where(act, nxt, state.last_token)
         step = act.astype(state.cache_len.dtype)
-    return DecodeState(cache=new_cache, cache_len=state.cache_len + step,
-                       last_token=nxt), logits[:, -1]
+    return dataclasses.replace(
+        state, cache=new_cache, cache_len=state.cache_len + step,
+        last_token=nxt), logits[:, -1]
 
 
 def serve_step(params, cfg: ModelConfig, state: DecodeState, *,
@@ -303,11 +329,14 @@ class ContinuousBatchingEngine:
         self.batch_size, self.max_len = batch_size, max_len
         self.dtype, self.interpret = dtype, interpret
         self.prefill_chunk = prefill_chunk
-        self.state = init_decode_state(cfg, batch_size, max_len, dtype,
-                                       plan=plan)
+        self.state = self._init_state()
         self.row_ctx = [0] * batch_size   # host mirror of cache_len
         self.live = [False] * batch_size
         self._pending: dict = {}          # slot -> in-flight prefill
+
+    def _init_state(self):
+        return init_decode_state(self.cfg, self.batch_size, self.max_len,
+                                 self.dtype, plan=self.plan)
 
     @property
     def occupancy(self) -> float:
@@ -354,12 +383,19 @@ class ContinuousBatchingEngine:
                     cache=p["cache"],
                     length=jnp.asarray(total, jnp.int32),
                     next_token=greedy_sample(logits)[0])
-                self.state = insert(self.state, res, slot)
+                self._insert(res, slot)
                 self.row_ctx[slot] = total
                 self.live[slot] = True
                 del self._pending[slot]
                 inserted.append((slot, int(res.next_token)))
         return inserted
+
+    def _insert(self, res: PrefillResult, slot: int) -> None:
+        self.state = insert(self.state, res, slot)
+
+    def _before_decode(self) -> None:
+        """Hook run right before each decode launch (the paged engine
+        grows page lists for rows crossing a page boundary here)."""
 
     def step(self):
         """One scheduler step: advance every pending prefill by one
@@ -371,6 +407,7 @@ class ContinuousBatchingEngine:
         inserted = self._advance_prefills()
         if not any(self.live):
             return None, inserted
+        self._before_decode()
         dispatch = None
         if self.plan is not None:
             dispatch = self.plan.step_dispatch(
@@ -378,7 +415,8 @@ class ContinuousBatchingEngine:
                  if alive])
         self.state, _ = decode_step(
             self.params, self.cfg, self.state, dispatch=dispatch,
-            active=jnp.asarray(self.live), interpret=self.interpret)
+            active=jnp.asarray(self.live), interpret=self.interpret,
+            block_tables=getattr(self.state, "block_tables", None))
         for i in range(self.batch_size):
             if self.live[i]:
                 self.row_ctx[i] += 1
@@ -394,3 +432,391 @@ class ContinuousBatchingEngine:
         self.state = evict(self.state, slot)
         self.row_ctx[slot] = 0
         self.live[slot] = False
+
+
+# ---------------------------------------------------------------------------
+# paged KV: PageAllocator -> PagedDecodeState -> paged engine
+# ---------------------------------------------------------------------------
+
+class OutOfPages(RuntimeError):
+    """The page pool cannot satisfy an allocation: the caller must
+    preempt a live request (or wait for one to finish) first."""
+
+
+class PageAllocator:
+    """Host-side free-list allocator over a fixed KV page pool.
+
+    Page 0 is a reserved *null page*: it is never handed out, so a
+    zeroed block-table row (a dead batch lane) references it harmlessly
+    — the masked kernels never read past a dead row's length 0 anyway,
+    and the clamp in the paged index maps keeps even the skipped
+    iterations inside the pool.  Keys are arbitrary (the engine uses
+    batch slot indices); ``pages[key]`` lists the key's page ids in row
+    order, i.e. exactly the prefix of its block-table row.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the reserved "
+                             "null page)")
+        if page_size % 8:
+            raise ValueError("page_size must be sublane-aligned (8)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # pop() order 1, 2, 3, ... — page 0 never enters the free list
+        self._free = list(range(num_pages - 1, 0, -1))
+        self.pages: dict = {}             # key -> [page ids, row order]
+        self.peak_used = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` KV entries."""
+        return -(-int(n_tokens) // self.page_size)
+
+    def alloc(self, key, n: int) -> list:
+        """Append ``n`` fresh pages to ``key``'s list.  All-or-nothing:
+        raises :class:`OutOfPages` (allocating none) when the free list
+        is short."""
+        if n > len(self._free):
+            raise OutOfPages(
+                f"need {n} pages for {key!r} but only {len(self._free)} "
+                f"of {self.num_pages - 1} are free — preempt or evict")
+        ids = [self._free.pop() for _ in range(n)]
+        self.pages.setdefault(key, []).extend(ids)
+        self.peak_used = max(self.peak_used, self.used_pages)
+        return ids
+
+    def ensure(self, key, n_tokens: int) -> list:
+        """Grow ``key``'s list to cover ``n_tokens`` entries; returns
+        the newly allocated ids ([] when already covered)."""
+        need = self.pages_for(n_tokens) - len(self.pages.get(key, []))
+        return self.alloc(key, need) if need > 0 else []
+
+    def release(self, key) -> list:
+        """Free every page held by ``key`` (no-op for unknown keys)."""
+        ids = self.pages.pop(key, [])
+        self._free.extend(reversed(ids))
+        return ids
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedDecodeState:
+    """DecodeState whose cache leaves are page pools
+    ``(num_pages, Hkv, page, Dh)`` (scan layers carry the usual leading
+    n_periods axis) plus the ``(B, max_pages)`` int32 block table every
+    layer shares."""
+    cache: Any
+    cache_len: jax.Array          # (B,) int32: per-row filled prefix
+    last_token: jax.Array         # (B,) int32
+    block_tables: jax.Array       # (B, max_pages) int32 page ids
+
+
+@dataclasses.dataclass
+class PreemptedRequest:
+    """A preempted request's host-side snapshot: the gathered page
+    contents per layer (same {"prefix","scan"} structure as the cache,
+    attn leaves shaped (n, Hkv, page, Dh) / (n_periods, n, ...)), its
+    token position and last sampled token.  ``resume`` scatters the
+    snapshot into freshly allocated pages — the KV bits are identical,
+    so the continuation is identical."""
+    kv: Any
+    n_pages: int
+    length: int
+    last_token: int
+
+
+def _check_paged_cfg(cfg: ModelConfig) -> None:
+    if cfg.attention == "mla":
+        raise NotImplementedError(
+            "paged KV is not supported for MLA latent caches")
+    for i in range(cfg.n_layers):
+        if cfg.block_kind(i) != "attn":
+            raise NotImplementedError(
+                "paged KV pools cover GQA attention caches only "
+                f"(layer {i} is {cfg.block_kind(i)!r})")
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                            *, num_pages: int, page_size: int,
+                            dtype=jnp.bfloat16) -> PagedDecodeState:
+    """Allocate the paged cache state: per-layer page pools plus one
+    zeroed block table.  ``max_len`` bounds a single row's context and
+    fixes the table width; the *pool* bounds total KV memory."""
+    _check_paged_cfg(cfg)
+    if max_len % page_size:
+        raise ValueError(f"max_len {max_len} must be a multiple of the "
+                         f"page size {page_size}")
+    hk, dh = cfg.kv_heads, cfg.head_dim
+
+    def pool():
+        return jnp.zeros((num_pages, hk, page_size, dh), dtype)
+
+    prefix = [{"attn": {"k": pool(), "v": pool()}}
+              for _ in range(cfg.first_dense_layers)]
+    scan = [jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape),
+        {"attn": {"k": pool(), "v": pool()}})
+        for _ in range(cfg.layer_period)]
+    return PagedDecodeState(
+        cache={"prefix": prefix, "scan": scan},
+        cache_len=jnp.zeros((batch,), jnp.int32),
+        last_token=jnp.zeros((batch,), jnp.int32),
+        block_tables=jnp.zeros((batch, max_len // page_size), jnp.int32))
+
+
+def _map_attn_leaves(cache, fn):
+    """Apply ``fn(leaf, scanned)`` to every attn cache leaf (paged
+    caches hold only attn leaves — enforced at init)."""
+    def one(lc, scanned):
+        return {"attn": {k: fn(v, scanned)
+                         for k, v in lc["attn"].items()}}
+    return {"prefix": [one(lc, False) for lc in cache["prefix"]],
+            "scan": [one(lc, True) for lc in cache["scan"]]}
+
+
+def _map_attn_pairs(cache, other, fn):
+    """Like :func:`_map_attn_leaves` over paired trees:
+    ``fn(cache_leaf, other_leaf, scanned)``."""
+    def one(lc, oc, scanned):
+        return {"attn": {k: fn(lc["attn"][k], oc["attn"][k], scanned)
+                         for k in lc["attn"]}}
+    return {"prefix": [one(a, b, False) for a, b
+                       in zip(cache["prefix"], other["prefix"])],
+            "scan": [one(a, b, True) for a, b
+                     in zip(cache["scan"], other["scan"])]}
+
+
+def _page_chunks(dense_row, n: int, page: int):
+    """(Hkv, max_len, Dh) dense row -> its first n pages,
+    (n, Hkv, page, Dh)."""
+    hkv, _, dh = dense_row.shape
+    return jnp.moveaxis(
+        dense_row[:, :n * page].reshape(hkv, n, page, dh), 1, 0)
+
+
+def _set_table_row(tables, slot: int, idx):
+    """Zero row ``slot`` and write ``idx`` as its leading prefix."""
+    row = jnp.zeros((tables.shape[1],), jnp.int32)
+    row = jax.lax.dynamic_update_slice(row, idx, (0,))
+    return tables.at[slot].set(row)
+
+
+def insert_paged(state: PagedDecodeState, result: PrefillResult,
+                 slot: int, page_ids: list) -> PagedDecodeState:
+    """Scatter a *dense* B=1 prefill cache into pool pages: each
+    layer's (1, Hkv, max_len, Dh) rows are cut into page chunks and
+    written to ``page_ids``; the slot's block-table row becomes
+    ``page_ids`` (zero-padded).  Prefill itself stays dense-side —
+    paging happens once, here, at admission."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    n = len(page_ids)
+
+    def put(pool, dense, scanned):
+        if scanned:
+            # (n_periods, num_pages, ...) vs (n_periods, 1, Hkv, S, Dh)
+            return jax.vmap(lambda p, d: p.at[idx].set(
+                _page_chunks(d, n, p.shape[2]).astype(p.dtype)))(
+                    pool, dense[:, 0])
+        return pool.at[idx].set(
+            _page_chunks(dense[0], n, pool.shape[2]).astype(pool.dtype))
+
+    return PagedDecodeState(
+        cache=_map_attn_pairs(state.cache, result.cache, put),
+        cache_len=state.cache_len.at[slot].set(
+            jnp.asarray(result.length, jnp.int32)),
+        last_token=state.last_token.at[slot].set(
+            jnp.asarray(result.next_token, jnp.int32)),
+        block_tables=_set_table_row(state.block_tables, slot, idx))
+
+
+def evict_paged(state: PagedDecodeState, slot: int) -> PagedDecodeState:
+    """Free batch row ``slot``: zero its table row, position and token.
+    (The caller releases the pages on the allocator — the pool bits
+    stay put and are overwritten when the pages are next handed out.)"""
+    return PagedDecodeState(
+        cache=state.cache,
+        cache_len=state.cache_len.at[slot].set(0),
+        last_token=state.last_token.at[slot].set(0),
+        block_tables=state.block_tables.at[slot].set(0))
+
+
+def gather_slot_pages(state: PagedDecodeState, page_ids: list):
+    """The page contents backing one row, gathered from every layer's
+    pool (device arrays; ``jax.device_get`` for a host snapshot)."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return _map_attn_leaves(
+        state.cache,
+        lambda leaf, scanned: leaf[:, idx] if scanned else leaf[idx])
+
+
+def resume_paged(state: PagedDecodeState, pre: PreemptedRequest,
+                 slot: int, page_ids: list) -> PagedDecodeState:
+    """Scatter a preempted request's KV snapshot into fresh pages and
+    re-point the slot's table row at them.  The pages differ, the bits
+    do not — generation continues exactly where preemption cut it."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+
+    def put(pool, saved, scanned):
+        saved = jnp.asarray(saved, pool.dtype)
+        if scanned:
+            return jax.vmap(lambda p, s: p.at[idx].set(s))(pool, saved)
+        return pool.at[idx].set(saved)
+
+    return PagedDecodeState(
+        cache=_map_attn_pairs(state.cache, pre.kv, put),
+        cache_len=state.cache_len.at[slot].set(pre.length),
+        last_token=state.last_token.at[slot].set(pre.last_token),
+        block_tables=_set_table_row(state.block_tables, slot, idx))
+
+
+class PagedContinuousBatchingEngine(ContinuousBatchingEngine):
+    """Continuous batching over a paged KV cache.
+
+    Same lifecycle and scheduler interface as the dense engine
+    (``begin_prefill / step / evict`` — :class:`RequestBatcher.serve`
+    drives both), but the cache is a page pool: ``begin_prefill``
+    *reserves* ``ceil((len+1)/page)`` pages for the lease up front (so
+    live rows growing during a chunked prefill cannot drain the pool
+    out from under it), the completed prefill scatters into the
+    reserved pages, each decode step then grows the page list of any
+    live row crossing a page boundary, and eviction returns the pages
+    to the free list.  Two new verbs:
+
+    * ``preempt(slot)`` — snapshot the row's pages + position to host
+      memory, free the pages, clear the slot.  Costs one gather.
+    * ``resume(pre, slot)`` — re-admit a snapshot into fresh pages;
+      the request continues bit-identically, no prefill recompute.
+
+    ``step_page_deficit()`` tells the scheduler how many pages short
+    the *next* decode step would run — its cue to preempt before the
+    in-step ``ensure`` raises :class:`OutOfPages`.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
+                 page_size: int, num_pages: int,
+                 max_len: Optional[int] = None, plan=None,
+                 dtype=jnp.float32, prefill_chunk: Optional[int] = None,
+                 interpret: bool = False):
+        self.page_size, self.num_pages = page_size, num_pages
+        self.allocator = PageAllocator(num_pages, page_size)
+        # monotone lease stamps: the scheduler preempts the *newest*
+        # lease first (it has the least sunk prefill/decode work)
+        self.lease_order = [0] * batch_size
+        self._lease_clock = 0
+        super().__init__(params, cfg, batch_size=batch_size,
+                         max_len=max_len, plan=plan, dtype=dtype,
+                         prefill_chunk=prefill_chunk,
+                         interpret=interpret)
+
+    def _init_state(self):
+        return init_paged_decode_state(
+            self.cfg, self.batch_size, self.max_len,
+            num_pages=self.num_pages, page_size=self.page_size,
+            dtype=self.dtype)
+
+    # -- page accounting ---------------------------------------------------
+
+    def can_admit_tokens(self, n_tokens: int) -> bool:
+        """Can a fresh ``n_tokens``-token prompt be admitted now?  It
+        needs pages for the prompt plus its first decoded token."""
+        return self.allocator.pages_for(n_tokens + 1) \
+            <= self.allocator.num_free
+
+    def can_resume(self, pre: PreemptedRequest) -> bool:
+        """Can a preempted snapshot be re-admitted now?  It needs its
+        saved pages back, and room for the next decoded token."""
+        return max(pre.n_pages,
+                   self.allocator.pages_for(pre.length + 1)) \
+            <= self.allocator.num_free
+
+    def step_page_deficit(self) -> int:
+        """Pages the next decode step needs beyond the free list (0
+        when the step can run)."""
+        need = sum(
+            max(0, self.allocator.pages_for(self.row_ctx[i] + 1)
+                - len(self.allocator.pages.get(i, [])))
+            for i in range(self.batch_size) if self.live[i])
+        return max(0, need - self.allocator.num_free)
+
+    # -- lifecycle overrides -----------------------------------------------
+
+    def begin_prefill(self, slot: int, prompt) -> None:
+        """Lease ``slot`` AND reserve the prompt's pages (plus the
+        first decoded token's — the quantity ``can_admit_tokens``
+        checks).  The prefill itself runs on a dense side cache over
+        the following steps; the reservation guarantees the pool can
+        take the result no matter how the live rows grow meanwhile."""
+        super().begin_prefill(slot, prompt)
+        try:
+            self.allocator.alloc(
+                slot, self.allocator.pages_for(len(prompt) + 1))
+        except OutOfPages:
+            del self._pending[slot]
+            raise
+
+    def _insert(self, res: PrefillResult, slot: int) -> None:
+        self.state = insert_paged(self.state, res, slot,
+                                  self.allocator.pages[slot])
+        self._lease_clock += 1
+        self.lease_order[slot] = self._lease_clock
+
+    def _before_decode(self) -> None:
+        # grow rows whose next token crosses into a new page; one
+        # batched table update regardless of how many rows grew
+        tbl = self.state.block_tables
+        grew = False
+        for i in range(self.batch_size):
+            if not self.live[i]:
+                continue
+            ids = self.allocator.ensure(i, self.row_ctx[i] + 1)
+            if ids:
+                start = len(self.allocator.pages[i]) - len(ids)
+                tbl = jax.lax.dynamic_update_slice(
+                    tbl, jnp.asarray([ids], jnp.int32), (i, start))
+                grew = True
+        if grew:
+            self.state = dataclasses.replace(self.state,
+                                             block_tables=tbl)
+
+    def evict(self, slot: int) -> None:
+        self.allocator.release(slot)
+        self.state = evict_paged(self.state, slot)
+        self.row_ctx[slot] = 0
+        self.live[slot] = False
+
+    def preempt(self, slot: int) -> PreemptedRequest:
+        """Save row ``slot``'s KV pages + position to host memory and
+        free the slot (pages, table row, lane).  The snapshot re-enters
+        through :meth:`resume` without any recompute."""
+        if not self.live[slot]:
+            raise ValueError(f"slot {slot} is not live")
+        ids = list(self.allocator.pages[slot])
+        pre = PreemptedRequest(
+            kv=jax.device_get(gather_slot_pages(self.state, ids)),
+            n_pages=len(ids),
+            length=self.row_ctx[slot],
+            last_token=int(self.state.last_token[slot]))
+        self.allocator.release(slot)
+        self.state = evict_paged(self.state, slot)
+        self.row_ctx[slot] = 0
+        self.live[slot] = False
+        return pre
+
+    def resume(self, pre: PreemptedRequest, slot: int) -> None:
+        """Re-admit a preempted snapshot into free slot ``slot``."""
+        if self.live[slot] or slot in self._pending:
+            raise ValueError(f"slot {slot} is not free")
+        ids = self.allocator.alloc(slot, pre.n_pages)
+        self.state = resume_paged(self.state, pre, slot, ids)
+        self.row_ctx[slot] = pre.length
+        self.live[slot] = True
+        self._lease_clock += 1
+        self.lease_order[slot] = self._lease_clock

@@ -38,7 +38,19 @@ schedule ranking is attention-driven); measured wall-clock isolates
 the attention pipeline x -> (Q) -> scores -> out that the schedules
 differ on.
 
+The cost model's *memory* claim is validated the same
+measured-vs-predicted way (printed after the latency cells; ``--memory``
+runs it alone): a paged serving engine drives a request stream and at
+every decode step the plan's ``predicted_kv_pages`` /
+``predicted_kv_page_words`` over the live rows' contexts are compared
+against the :class:`~repro.serve.engine.PageAllocator`'s actual
+page-pool occupancy — per-step agreement plus the peak, next to the
+dense ``batch * max_len`` allocation the pool replaces.  Preemptions
+under page pressure are part of the run, so the agreement also covers
+pages leaving and re-entering the pool.
+
     PYTHONPATH=src python tools/validate_costmodel.py
+    PYTHONPATH=src python tools/validate_costmodel.py --memory
     PYTHONPATH=src python tools/validate_costmodel.py \
         --arch qwen3-8b --backend interpret --prefill-seq 128
 """
@@ -360,6 +372,124 @@ def _print_table(rows) -> None:
             print()
 
 
+def validate_memory(archs=("qwen3-8b", "starcoder2-7b"), *,
+                    smoke: bool = True) -> list:
+    """Measured-vs-predicted KV *memory* cells: serve a request stream
+    on the paged engine and, after every decode step, compare the
+    plan's page prediction over the live rows' contexts (each row owns
+    exactly ``ceil(ctx / page)`` pages) with the allocator's actual
+    pool occupancy.  The stream is sized to trigger at least admission
+    queueing — and, pool permitting, preemption — so the agreement
+    covers pages leaving and re-entering the pool, not just monotone
+    growth."""
+    import numpy as np
+
+    from repro.models import init_params_and_axes
+    from repro.serve import (PagedContinuousBatchingEngine, Request,
+                             RequestBatcher, make_serving_plan)
+
+    max_len, batch, page, num_pages = 96, 4, 8, 13   # 12 usable pages
+    n_requests, budget = 6, 6
+    rows: list = []
+    for arch in archs:
+        cfg = configs.get_config(arch, smoke=smoke)
+        if not lower.supported(cfg):
+            rows.append({"name": f"skip_{arch}", "kind": "skip",
+                         "reason": "not lowerable (MLA/SSM)"})
+            continue
+        lower.clear_plan_cache()
+        params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+        plan = make_serving_plan(cfg, max_len, paged=True,
+                                 page_size=page)
+        eng = PagedContinuousBatchingEngine(
+            params, cfg, batch_size=batch, max_len=max_len,
+            page_size=page, num_pages=num_pages, plan=plan,
+            prefill_chunk=16)
+        bat = RequestBatcher(batch_size=batch, eos_id=-1,
+                             max_len=max_len)
+        rng = np.random.default_rng(2)
+        for uid in range(n_requests):
+            bat.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(8, 41))
+                                    ).tolist(),
+                max_new_tokens=budget))
+
+        exe = lower.resolve_plan(cfg, "decode", max_len,
+                                 n_blocks=cfg.n_layers)
+        samples, agree = 0, 0
+        pred_peak = meas_peak = 0
+        preempts = [0]
+        orig_step, orig_pre = eng.step, eng.preempt
+        eng.preempt = lambda s: (preempts.__setitem__(
+            0, preempts[0] + 1), orig_pre(s))[1]
+
+        def step():
+            nonlocal samples, agree, pred_peak, meas_peak
+            out = orig_step()
+            lens = [eng.row_ctx[i] for i in range(batch)
+                    if eng.live[i]]
+            pred = exe.predicted_kv_pages(lens, page)
+            # plus the page reservations of leases still mid-prefill:
+            # admission reserves ceil((prompt+1)/page) pages up front
+            pred += sum(
+                eng.allocator.pages_for(p["tokens"].shape[1] + 1)
+                for p in eng._pending.values())
+            meas = eng.allocator.used_pages
+            samples += 1
+            agree += pred == meas
+            pred_peak = max(pred_peak, pred)
+            meas_peak = max(meas_peak, meas)
+            return out
+
+        eng.step = step
+        done = bat.serve(eng, max_steps=400)
+        w = (cfg.kv_heads, cfg.head_dim, cfg.n_layers)
+        rows.append({
+            "name": f"{arch}_paged_memory", "kind": "memory",
+            "arch": arch, "page_size": page,
+            "pool_pages": num_pages - 1, "batch": batch,
+            "requests": n_requests, "completed": len(done),
+            "steps": samples, "page_agreement": agree / max(samples, 1),
+            "predicted_peak_pages": pred_peak,
+            "measured_peak_pages": meas_peak,
+            "allocator_peak_pages": eng.allocator.peak_used,
+            "predicted_peak_kv_words": exe.predicted_kv_page_words(
+                [pred_peak * page], page, *w),
+            "measured_peak_kv_words":
+                meas_peak * page * 2 * w[0] * w[1] * w[2],
+            "dense_kv_words":
+                batch * max_len * 2 * w[0] * w[1] * w[2],
+            "preemptions": preempts[0],
+        })
+    return rows
+
+
+def _print_memory_table(rows) -> None:
+    cells = [r for r in rows if r.get("kind") == "memory"]
+    if not cells:
+        return
+    hdr = (f"{'cell':30} {'pg agree':>8} {'pred pk':>8} {'meas pk':>8} "
+           f"{'pred KV words':>13} {'meas KV words':>13} "
+           f"{'dense words':>11} {'preempt':>7}")
+    print("paged-KV memory validation (predicted pages per live row "
+          "vs PageAllocator occupancy, per decode step):")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in cells:
+        print(f"{r['name']:30} {r['page_agreement']:8.3f} "
+              f"{r['predicted_peak_pages']:8d} "
+              f"{r['measured_peak_pages']:8d} "
+              f"{r['predicted_peak_kv_words']:13d} "
+              f"{r['measured_peak_kv_words']:13d} "
+              f"{r['dense_kv_words']:11d} {r['preemptions']:7d}")
+    for r in rows:
+        if r.get("kind") == "skip":
+            print(f"  skip {r['name']}: {r['reason']}")
+    print()
+
+
 def validate_mesh(repeats: int = 5) -> list:
     """--mesh cells: predicted ``comm_cycles`` of head-partitioned
     multi-core schedules vs the *measured* wall-time of the collective
@@ -488,6 +618,11 @@ def main(argv=None) -> None:
                         "collective wall-time on a 2-device host mesh "
                         "(re-execs itself with forced devices if "
                         "needed); runs only the mesh cells")
+    p.add_argument("--memory", action="store_true",
+                   help="validate the paged-KV memory prediction "
+                        "(plan page counts vs measured PageAllocator "
+                        "occupancy) and nothing else; the default run "
+                        "prints the same table after the latency cells")
     p.add_argument("--arch", action="append",
                    help="architecture(s) to validate (repeatable; "
                         "default qwen3-8b + starcoder2-7b)")
@@ -504,13 +639,17 @@ def main(argv=None) -> None:
     if a.mesh:
         _mesh_main(a.repeats)
         return
+    archs = tuple(a.arch) if a.arch else ("qwen3-8b", "starcoder2-7b")
+    if a.memory:
+        _print_memory_table(validate_memory(archs, smoke=not a.full))
+        return
     rows = validate(
-        tuple(a.arch) if a.arch else ("qwen3-8b", "starcoder2-7b"),
-        smoke=not a.full, backend=a.backend,
+        archs, smoke=not a.full, backend=a.backend,
         prefill_seqs=tuple(a.prefill_seq or (128, 512)),
         decode_ctxs=tuple(a.decode_ctx or (48, 512)),
         repeats=a.repeats)
     _print_table(rows)
+    _print_memory_table(validate_memory(archs, smoke=not a.full))
 
 
 if __name__ == "__main__":
