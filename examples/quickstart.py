@@ -95,6 +95,60 @@ def paged_serving():
           f"tokens) vs dense {engine.batch_size * engine.max_len}")
 
 
+def fault_tolerant_serving():
+    """The same paged stream driven through the ServingSupervisor
+    under an injected fault schedule: every fault kind is recovered,
+    the state is audited every step, and the incident ledger records
+    what broke and what was done (docs/serving.md keeps this snippet
+    verbatim — tools/check_snippets.py enforces it)."""
+    print("\n=== fault tolerance: supervisor + chaos injection ===")
+    import tempfile
+    from repro import configs
+    from repro.models import init_params_and_axes
+    cfg = configs.get_config("qwen3-8b", smoke=True)
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [5, 3, 5, 8, 9, 7]]
+
+    from repro.serve import (PagedContinuousBatchingEngine, Request,
+                             RequestBatcher, make_serving_plan)
+    plan = make_serving_plan(cfg, max_len=64, paged=True, page_size=8)
+    engine = PagedContinuousBatchingEngine(
+        params, cfg, batch_size=4, max_len=64, page_size=8,
+        num_pages=13, plan=plan, prefill_chunk=16)
+    batcher = RequestBatcher(batch_size=4, eos_id=-1, max_len=64)
+    for uid, prompt in enumerate(prompts):
+        batcher.submit(Request(uid=uid, prompt=prompt, max_new_tokens=4))
+    ckpt_dir = tempfile.mkdtemp(prefix="serving-ckpt-")
+
+    from repro.checkpoint import CheckpointManager
+    from repro.serve import (FaultInjector, FaultSpec,
+                             PagePressurePolicy, ServingSupervisor)
+
+    injector = FaultInjector([
+        FaultSpec("oom", step=0, times=1),        # page exhaustion
+        FaultSpec("kernel", step=2, impl="reference"),
+        FaultSpec("nan", step=3, slot=1),         # poisoned logits
+        FaultSpec("preempt", step=4, count=1),    # preemption storm
+    ])
+    supervisor = ServingSupervisor(
+        engine, batcher, injector=injector,
+        pressure=PagePressurePolicy(victim="newest"),
+        deadline_steps=50, retry_budget=3, cooloff=4,
+        ckpt=CheckpointManager(ckpt_dir), checkpoint_every=8,
+        audit_every=1)
+    finished = supervisor.serve(max_steps=128)
+
+    for inc in supervisor.ledger.incidents:
+        print(f"  step {inc.step} [{inc.fault}] {inc.action} -> "
+              f"{inc.outcome}")
+    for r in finished:
+        print(f"  request {r.uid}: generated {r.generated} "
+              f"(failed={r.failed})")
+    print(f"  {len(supervisor.ledger)} incidents, "
+          f"{len(supervisor.failed)} failed requests, "
+          f"final demotion level {engine.demotions}")
+
+
 def run_kernels():
     print("\n=== the same schedules as fused kernels (CPU interpret) ===")
     key = jax.random.PRNGKey(0)
@@ -131,3 +185,4 @@ if __name__ == "__main__":
     run_kernels()
     continuous_batching()
     paged_serving()
+    fault_tolerant_serving()

@@ -1,3 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointError", "CheckpointManager"]

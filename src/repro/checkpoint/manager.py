@@ -31,6 +31,10 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk is missing, truncated, or corrupt."""
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
@@ -73,7 +77,16 @@ class CheckpointManager:
                     "leaves": []}
         for i, leaf in enumerate(host_leaves):
             name = f"leaf_{i:05d}.npy"
-            np.save(os.path.join(tmp, name), leaf)
+            # each leaf lands via its own temp file + atomic rename +
+            # fsync, so a crash mid-save can never leave a half-written
+            # .npy under the final leaf name
+            leaf_final = os.path.join(tmp, name)
+            leaf_tmp = leaf_final + ".part"
+            with open(leaf_tmp, "wb") as f:
+                np.save(f, leaf)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(leaf_tmp, leaf_final)
             manifest["leaves"].append(
                 {"file": name, "shape": list(leaf.shape),
                  "dtype": str(leaf.dtype)})
@@ -105,27 +118,82 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Optional[Any] = None) -> tuple[Any, dict]:
-        """Rebuild the pytree of ``like``'s structure.  ``shardings``
-        (same structure or None) re-shards onto the current mesh."""
+    def _checkpoint_path(self, step: Optional[int]) -> tuple[str, int]:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        if not os.path.isdir(path):
+            raise CheckpointError(
+                f"checkpoint step {step} missing under {self.dir} "
+                f"(have steps {self.all_steps()})")
+        return path, step
+
+    def _load_manifest(self, path: str, step: int) -> dict:
+        mpath = os.path.join(path, "manifest.json")
+        try:
+            with open(mpath) as f:
+                return json.load(f)
+        except FileNotFoundError as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: manifest.json missing "
+                f"({mpath})") from e
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: manifest.json corrupt "
+                f"({e})") from e
+
+    def _load_leaf(self, path: str, meta: dict, step: int) -> np.ndarray:
+        fpath = os.path.join(path, meta["file"])
+        try:
+            arr = np.load(fpath)
+        except FileNotFoundError as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: leaf {meta['file']} missing "
+                f"— checkpoint incomplete") from e
+        except Exception as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: leaf {meta['file']} "
+                f"truncated or corrupt ({type(e).__name__}: {e})") from e
+        if list(arr.shape) != list(meta["shape"]) or \
+                str(arr.dtype) != meta["dtype"]:
+            raise CheckpointError(
+                f"checkpoint step {step}: leaf {meta['file']} shape/"
+                f"dtype {arr.shape}/{arr.dtype} does not match "
+                f"manifest {tuple(meta['shape'])}/{meta['dtype']}")
+        return arr
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> tuple[Any, dict]:
+        """Rebuild the pytree of ``like``'s structure.  ``shardings``
+        (same structure or None) re-shards onto the current mesh."""
+        path, step = self._checkpoint_path(step)
+        manifest = self._load_manifest(path, step)
         leaves_like, treedef = jax.tree.flatten(like)
-        assert len(leaves_like) == len(manifest["leaves"]), \
-            "checkpoint/model structure mismatch"
+        if len(leaves_like) != len(manifest["leaves"]):
+            raise CheckpointError(
+                f"checkpoint step {step}: {len(manifest['leaves'])} "
+                f"leaves on disk vs {len(leaves_like)} in the supplied "
+                f"structure — checkpoint/model structure mismatch")
         shard_leaves = (treedef.flatten_up_to(shardings)
                         if shardings is not None
                         else [None] * len(leaves_like))
         out = []
         for meta, shard in zip(manifest["leaves"], shard_leaves):
-            arr = np.load(os.path.join(path, meta["file"]))
+            arr = self._load_leaf(path, meta, step)
             if shard is not None:
                 out.append(jax.device_put(arr, shard))
             else:
                 out.append(jax.numpy.asarray(arr))
         return treedef.unflatten(out), manifest["extras"]
+
+    def restore_flat(self, step: Optional[int] = None
+                     ) -> tuple[list, dict]:
+        """Load a checkpoint as a flat host-leaf list (manifest order)
+        plus its extras, without requiring a like-structured pytree —
+        the caller owns reassembly (see serve/snapshot.py)."""
+        path, step = self._checkpoint_path(step)
+        manifest = self._load_manifest(path, step)
+        leaves = [self._load_leaf(path, meta, step)
+                  for meta in manifest["leaves"]]
+        return leaves, manifest["extras"]

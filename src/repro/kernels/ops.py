@@ -128,6 +128,30 @@ def reset_lengths_downgrade_warning() -> None:
     _warned_downgrade_reasons.clear()
 
 
+class KernelLaunchError(RuntimeError):
+    """A kernel launch failed.  Raised at dispatch time — in practice by
+    an installed fault injector (serve/faults.py); the serving
+    supervisor recovers by rung-down on the lowering ladder."""
+
+
+#: process-wide fault-injection hook consulted on every dispatch
+#: resolution; None outside chaos tests (see serve/faults.py).
+_fault_injector = None
+
+
+def set_fault_injector(inj) -> None:
+    """Install (or clear, with ``None``) a fault injector whose
+    ``on_kernel(entry, impl)`` runs after each entry point resolves its
+    impl — the kernel-launch-failure hook point of serve/faults.py."""
+    global _fault_injector
+    _fault_injector = inj
+
+
+def _maybe_inject(entry: str, impl: str) -> None:
+    if _fault_injector is not None:
+        _fault_injector.on_kernel(entry, impl)
+
+
 def _downgrade(plan, reason: str, *, kernel: str) -> str:
     """pallas -> xla when a call cannot take the named Pallas kernel:
     warn once per (kernel, reason) and record the concrete *reason* on
@@ -250,6 +274,7 @@ def _resolve(entry: str, impl: str, plan, sq: int, skv: int, d: int,
         else:
             impl = default_impl()
     block_q, block_k = _blocks(sq, skv, d, block_q, block_k)
+    _maybe_inject(entry, impl)
     return impl, block_q, block_k, interpret, plan
 
 

@@ -18,7 +18,7 @@ from repro.lower.plan import (DECODE_MEGAKERNEL, FUSED_ATTENTION,
                               KERNEL_PATHS, QPROJ_ATTENTION, UNFUSED,
                               BlockPlan, Downgrade, ExecutionPlan)
 from repro.lower.runtime import (PlanDispatch, ServingPlan, dispatch,
-                                 impl_for, serving_plan)
+                                 impl_for, rung_down, serving_plan)
 
 __all__ = [
     "UNFUSED", "FUSED_ATTENTION", "QPROJ_ATTENTION",
@@ -27,5 +27,6 @@ __all__ = [
     "lower", "lower_phase_plan", "supported",
     "bucket_for", "resolve_plan", "plan_cache_info", "clear_plan_cache",
     "kernel_plan",
-    "PlanDispatch", "ServingPlan", "dispatch", "impl_for", "serving_plan",
+    "PlanDispatch", "ServingPlan", "dispatch", "impl_for", "rung_down",
+    "serving_plan",
 ]

@@ -33,8 +33,8 @@ from repro.lower import lowering
 from repro.lower.plan import (DECODE_MEGAKERNEL, FUSED_ATTENTION,
                               QPROJ_ATTENTION, UNFUSED, ExecutionPlan)
 
-__all__ = ["PlanDispatch", "dispatch", "impl_for", "ServingPlan",
-           "serving_plan"]
+__all__ = ["PlanDispatch", "dispatch", "impl_for", "rung_down",
+           "ServingPlan", "serving_plan"]
 
 
 def impl_for(path: str, backend: str = "cpu",
@@ -172,6 +172,38 @@ def dispatch(plan: ExecutionPlan, *, backend: str = "cpu",
     return PlanDispatch(plan=plan, path=path, impl=impl,
                         block_q=t.block_q, block_k=t.block_kv,
                         interpret=interpret, paged=paged)
+
+
+#: the lowering ladder, top rung first — rung-down recovery walks it
+#: path by path and ends at the chunked-XLA unfused bottom rung.
+_LADDER = [DECODE_MEGAKERNEL, QPROJ_ATTENTION, FUSED_ATTENTION, UNFUSED]
+
+
+def rung_down(d: PlanDispatch,
+              reason: str = "kernel launch failure"
+              ) -> Optional[PlanDispatch]:
+    """One step down the lowering ladder from a legalised dispatch:
+    ``decode_megakernel -> qproj_attention -> fused_attention ->
+    unfused(reference) -> unfused(xla)``, recording the step on the
+    plan's downgrade ledger.  Returns the demoted dispatch, or ``None``
+    from the bottom rung (nothing lower to fall to).
+
+    This is the supervisor's kernel-failure recovery primitive
+    (serve/supervisor.py): when a launch raises, the engine retries the
+    step one rung lower — same math, progressively less fused — so a
+    sick fused kernel degrades service instead of killing the batch.
+    """
+    if d.path != UNFUSED:
+        new_path = _LADDER[_LADDER.index(d.path) + 1]
+        new_impl = ("reference" if new_path == UNFUSED else d.impl)
+    elif d.impl != "xla":
+        new_path, new_impl = d.path, "xla"
+    else:
+        return None
+    d.plan.record_downgrade(
+        f"{reason}: rung-down {d.path}/{d.impl} -> "
+        f"{new_path}/{new_impl}", d.path, new_path)
+    return dataclasses.replace(d, path=new_path, impl=new_impl)
 
 
 @dataclasses.dataclass

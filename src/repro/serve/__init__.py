@@ -9,6 +9,11 @@ from repro.serve.engine import (ContinuousBatchingEngine, DecodeState,
                                 insert_paged, make_serving_plan,
                                 prefill, prefill_request, serve_step)
 from repro.serve.batcher import Request, RequestBatcher
+from repro.serve.audit import audit, audit_engine
+from repro.serve.faults import (FaultInjector, FaultSpec, Incident,
+                                IncidentLedger)
+from repro.serve.snapshot import restore_engine, snapshot_engine
+from repro.serve.supervisor import PagePressurePolicy, ServingSupervisor
 
 __all__ = ["ContinuousBatchingEngine", "DecodeState", "OutOfPages",
            "PageAllocator", "PagedContinuousBatchingEngine",
@@ -17,4 +22,8 @@ __all__ = ["ContinuousBatchingEngine", "DecodeState", "OutOfPages",
            "greedy_sample", "init_decode_state",
            "init_paged_decode_state", "insert", "insert_paged",
            "make_serving_plan", "prefill", "prefill_request",
-           "serve_step", "Request", "RequestBatcher"]
+           "serve_step", "Request", "RequestBatcher",
+           "audit", "audit_engine", "FaultInjector", "FaultSpec",
+           "Incident", "IncidentLedger", "restore_engine",
+           "snapshot_engine", "PagePressurePolicy",
+           "ServingSupervisor"]

@@ -61,6 +61,11 @@ class Request:
     # after preemption (None otherwise): the next lease resumes it
     # instead of re-prefilling
     paused: object = None
+    # supervisor bookkeeping: quarantine re-admissions consumed so far
+    # and whether the request was failed (deadline / retry budget
+    # exhausted) — failed requests are reported, never silently dropped
+    retries: int = 0
+    failed: bool = False
 
 
 class RequestBatcher:
@@ -83,7 +88,27 @@ class RequestBatcher:
         ``max_len`` set, a prompt that cannot fit the cache alongside
         at least one new token is rejected; the generation budget is
         clamped to the cache headroom (a ``max_len - 1`` prompt is
-        admitted with budget 1)."""
+        admitted with budget 1).  Prompts are validated here — empty
+        or non-integer token arrays fail fast with a ``ValueError``
+        instead of a shape error deep inside prefill — and normalised
+        to a plain list of ints."""
+        toks = np.asarray(req.prompt)
+        if toks.ndim != 1:
+            raise ValueError(
+                f"request {req.uid}: prompt must be a 1-D token "
+                f"sequence, got shape {toks.shape}")
+        if toks.size == 0:
+            raise ValueError(
+                f"request {req.uid}: empty prompt — nothing to prefill")
+        if not np.issubdtype(toks.dtype, np.integer):
+            raise ValueError(
+                f"request {req.uid}: prompt tokens must be integers, "
+                f"got dtype {toks.dtype}")
+        req.prompt = [int(t) for t in toks]
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 1, "
+                f"got {req.max_new_tokens}")
         if self.max_len is not None:
             if len(req.prompt) >= self.max_len:
                 raise ValueError(
@@ -176,25 +201,13 @@ class RequestBatcher:
         return self.finished
 
     def _relieve_page_pressure(self, engine) -> list:
-        """Preempt newest leases until the next decode step fits the
-        free page list.  Preempted requests rejoin the queue *front*
-        (newest-preempted first, so the front stays oldest-first) with
-        their KV snapshot stashed on ``req.paused``.  Returns the
-        preempted slots."""
-        preempted = []
-        while engine.step_page_deficit() > 0:
-            live = [i for i in range(self.batch_size)
-                    if self.slots[i] is not None and engine.live[i]]
-            if len(live) <= 1:
-                break   # a lone request must run (or hit OutOfPages)
-            victim = max(live, key=lambda i: engine.lease_order[i])
-            req = self.slots[victim]
-            req.paused = engine.preempt(victim)
-            self.slots[victim] = None
-            self.slot_lens[victim] = 0
-            self.queue.appendleft(req)
-            preempted.append(victim)
-        return preempted
+        """Preempt leases until the next decode step fits the free
+        page list — delegated to the default (newest-victim)
+        :class:`~repro.serve.supervisor.PagePressurePolicy`; the
+        supervisor swaps in other victim orders through the same
+        policy object.  Returns the preempted slots."""
+        from repro.serve.supervisor import PagePressurePolicy
+        return PagePressurePolicy().relieve(engine, self)
 
     def serve(self, engine, max_steps: int = 1000) -> list:
         """Drive a :class:`~repro.serve.engine.ContinuousBatchingEngine`

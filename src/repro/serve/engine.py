@@ -333,6 +333,21 @@ class ContinuousBatchingEngine:
         self.row_ctx = [0] * batch_size   # host mirror of cache_len
         self.live = [False] * batch_size
         self._pending: dict = {}          # slot -> in-flight prefill
+        # insertions whose (slot, first_token) the caller has not yet
+        # been handed — survives a raised launch mid-_advance_prefills
+        # so a retried step still reports every completed insert
+        self._insert_backlog: list = []
+        #: standing rung-down count applied to every resolved dispatch
+        #: (the supervisor's kernel-failure recovery; see
+        #: lower/runtime.py:rung_down).  0 = run the planned path.
+        self.demotions = 0
+        #: serve-layer fault injector (serve/faults.py); None outside
+        #: chaos tests.
+        self.fault_injector = None
+        #: host copy of the last decode launch's final-position logits
+        #: (B, vocab) — the supervisor's NaN-detection window.
+        self.last_logits: Optional[np.ndarray] = None
+        self.last_dispatch = None
 
     def _init_state(self):
         return init_decode_state(self.cfg, self.batch_size, self.max_len,
@@ -363,16 +378,19 @@ class ContinuousBatchingEngine:
 
     def _advance_prefills(self) -> list:
         """Run one prefill chunk per pending request; insert the ones
-        that complete.  Returns [(slot, first_token), ...]."""
-        inserted = []
+        that complete.  Returns [(slot, first_token), ...].  Retry-safe:
+        completions are staged on ``_insert_backlog``, so a launch
+        failure partway through the pending set never loses an already
+        -inserted request's first token."""
+        inserted = self._insert_backlog
         for slot, p in list(self._pending.items()):
             total = p["tokens"].shape[1]
             chunk = self.prefill_chunk or total
             piece = p["tokens"][:, p["pos"]:p["pos"] + chunk]
             dispatch = None
             if self.plan is not None:
-                dispatch = self.plan.chunk_dispatch(
-                    p["pos"] + piece.shape[1], piece.shape[1])
+                dispatch = self._demoted(self.plan.chunk_dispatch(
+                    p["pos"] + piece.shape[1], piece.shape[1]))
             logits, p["cache"] = tf.forward(
                 self.params, self.cfg, tokens=piece, cache=p["cache"],
                 cache_len=p["pos"], interpret=self.interpret,
@@ -388,6 +406,7 @@ class ContinuousBatchingEngine:
                 self.live[slot] = True
                 del self._pending[slot]
                 inserted.append((slot, int(res.next_token)))
+        self._insert_backlog = []
         return inserted
 
     def _insert(self, res: PrefillResult, slot: int) -> None:
@@ -397,6 +416,68 @@ class ContinuousBatchingEngine:
         """Hook run right before each decode launch (the paged engine
         grows page lists for rows crossing a page boundary here)."""
 
+    def _demoted(self, dispatch):
+        """Apply the standing ``demotions`` count to a resolved
+        dispatch: each unit walks it one rung down the lowering ladder
+        (kernel-failure recovery; the descent is recorded on the plan's
+        downgrade ledger by ``rung_down``)."""
+        if dispatch is None or not self.demotions:
+            return dispatch
+        from repro.lower.runtime import rung_down
+        for _ in range(self.demotions):
+            lower = rung_down(dispatch, "kernel-failure recovery")
+            if lower is None:
+                break
+            dispatch = lower
+        return dispatch
+
+    def _inject_nan(self) -> None:
+        """Fault hook: poison one live slot's logits/token this step if
+        the installed injector says so (chaos testing only)."""
+        inj = self.fault_injector
+        if inj is None:
+            return
+        slot = inj.nan_slot()
+        if slot is None or slot >= self.batch_size \
+                or not self.live[slot]:
+            return
+        if self.last_logits is not None:
+            # np.asarray of a device buffer is a read-only view
+            self.last_logits = self.last_logits.copy()
+            self.last_logits[slot] = np.nan
+        self.state = dataclasses.replace(
+            self.state,
+            last_token=self.state.last_token.at[slot].set(0))
+
+    def decode_once(self):
+        """The decode half of :meth:`step`: one whole-batch launch over
+        the live rows (no prefill advance).  Returns the (B,) last
+        tokens, or None when no row is live.  Retry-safe: host and
+        device state are only advanced after the launch succeeds, so a
+        raised launch (kernel failure, ``OutOfPages`` from the in-step
+        ``ensure``) leaves the step re-runnable."""
+        if not any(self.live):
+            self.last_logits = None
+            return None
+        self._before_decode()
+        dispatch = None
+        if self.plan is not None:
+            dispatch = self._demoted(self.plan.step_dispatch(
+                [c for c, alive in zip(self.row_ctx, self.live)
+                 if alive]))
+        self.last_dispatch = dispatch
+        new_state, logits = decode_step(
+            self.params, self.cfg, self.state, dispatch=dispatch,
+            active=jnp.asarray(self.live), interpret=self.interpret,
+            block_tables=getattr(self.state, "block_tables", None))
+        self.state = new_state
+        self.last_logits = np.asarray(logits)
+        self._inject_nan()
+        for i in range(self.batch_size):
+            if self.live[i]:
+                self.row_ctx[i] += 1
+        return np.asarray(self.state.last_token)
+
     def step(self):
         """One scheduler step: advance every pending prefill by one
         chunk (inserting completions), then one whole-batch decode
@@ -405,25 +486,65 @@ class ContinuousBatchingEngine:
         ``(tokens, inserted)``: the (B,) last tokens (None if no row
         is live) and the [(slot, first_token), ...] insertions."""
         inserted = self._advance_prefills()
-        if not any(self.live):
-            return None, inserted
-        self._before_decode()
-        dispatch = None
-        if self.plan is not None:
-            dispatch = self.plan.step_dispatch(
-                [c for c, alive in zip(self.row_ctx, self.live)
-                 if alive])
-        self.state, _ = decode_step(
-            self.params, self.cfg, self.state, dispatch=dispatch,
-            active=jnp.asarray(self.live), interpret=self.interpret,
-            block_tables=getattr(self.state, "block_tables", None))
-        for i in range(self.batch_size):
-            if self.live[i]:
-                self.row_ctx[i] += 1
-        return np.asarray(self.state.last_token), inserted
+        return self.decode_once(), inserted
 
     # the lifecycle verb: prefill -> insert -> *generate*
     generate = step
+
+    def rollback_slot(self, slot: int, ctx: int, token: int) -> None:
+        """Rewind row ``slot`` to a known-good (context, last token) —
+        the supervisor's quarantine primitive.  The rewound step's KV
+        write is left beyond the restored length, where the masked
+        kernels never read it (and a replay overwrites it with the
+        identical values, since K/V depend only on the clean input
+        token and position)."""
+        self.state = dataclasses.replace(
+            self.state,
+            cache_len=self.state.cache_len.at[slot].set(int(ctx)),
+            last_token=self.state.last_token.at[slot].set(int(token)))
+        self.row_ctx[slot] = int(ctx)
+
+    def can_resume(self, pre: "PreemptedRequest") -> bool:
+        """Dense rows are pre-allocated: a snapshot can always
+        re-enter a free slot (the paged engine overrides with its page
+        check)."""
+        return True
+
+    def preempt(self, slot: int) -> "PreemptedRequest":
+        """Snapshot row ``slot``'s cache rows + position to host memory
+        and free the lane — the dense twin of the paged engine's verb,
+        so the supervisor drives both engines uniformly.  (Nothing to
+        give back to an allocator: dense rows are pre-allocated.)"""
+        if not self.live[slot]:
+            raise ValueError(f"slot {slot} is not live")
+
+        def take(axis):
+            def f(full):
+                return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis)
+            return f
+        # batch at axis 0 of prefix-layer caches, axis 1 of the
+        # period-stacked scan caches — the layout ``insert`` scatters
+        kv = {"prefix": jax.tree.map(take(0), self.state.cache["prefix"]),
+              "scan": jax.tree.map(take(1), self.state.cache["scan"])}
+        pre = PreemptedRequest(
+            kv=jax.device_get(kv), n_pages=0,
+            length=self.row_ctx[slot],
+            last_token=int(np.asarray(self.state.last_token)[slot]))
+        self.evict(slot)
+        return pre
+
+    def resume(self, pre: "PreemptedRequest", slot: int) -> None:
+        """Re-admit a preempted snapshot into free slot ``slot``; the
+        request continues bit-identically, no prefill recompute."""
+        if self.live[slot] or slot in self._pending:
+            raise ValueError(f"slot {slot} is not free")
+        res = PrefillResult(
+            cache=jax.tree.map(jnp.asarray, pre.kv),
+            length=jnp.asarray(pre.length, jnp.int32),
+            next_token=jnp.asarray(pre.last_token, jnp.int32))
+        self._insert(res, slot)
+        self.row_ctx[slot] = pre.length
+        self.live[slot] = True
 
     def evict(self, slot: int) -> None:
         """Reclaim ``slot`` (request finished or cancelled): frees the
@@ -467,6 +588,12 @@ class PageAllocator:
         self._free = list(range(num_pages - 1, 0, -1))
         self.pages: dict = {}             # key -> [page ids, row order]
         self.peak_used = 0
+        #: bookkeeping oddities worth surfacing (e.g. a release of an
+        #: already-released key) — recorded, never raised.
+        self.notes: list = []
+        #: serve-layer fault injector (serve/faults.py); every alloc
+        #: (and thus every ensure that grows) consults it first.
+        self.fault_injector = None
 
     @property
     def num_free(self) -> int:
@@ -484,6 +611,8 @@ class PageAllocator:
         """Append ``n`` fresh pages to ``key``'s list.  All-or-nothing:
         raises :class:`OutOfPages` (allocating none) when the free list
         is short."""
+        if self.fault_injector is not None:
+            self.fault_injector.on_alloc(key, n)
         if n > len(self._free):
             raise OutOfPages(
                 f"need {n} pages for {key!r} but only {len(self._free)} "
@@ -500,8 +629,16 @@ class PageAllocator:
         return self.alloc(key, need) if need > 0 else []
 
     def release(self, key) -> list:
-        """Free every page held by ``key`` (no-op for unknown keys)."""
-        ids = self.pages.pop(key, [])
+        """Free every page held by ``key``.  Idempotent: an unknown or
+        already-released key returns ``[]`` with a recorded note — a
+        double release is a scheduler bookkeeping smell worth
+        surfacing, never worth killing the batch over."""
+        if key not in self.pages:
+            self.notes.append(
+                f"release({key!r}): unknown or already-released key "
+                f"(no-op)")
+            return []
+        ids = self.pages.pop(key)
         self._free.extend(reversed(ids))
         return ids
 
@@ -711,6 +848,11 @@ class PagedContinuousBatchingEngine(ContinuousBatchingEngine):
         # lease first (it has the least sunk prefill/decode work)
         self.lease_order = [0] * batch_size
         self._lease_clock = 0
+        # host mirror of how many of each slot's pages the *device*
+        # block table already indexes — lets a decode step retried
+        # after a mid-loop OutOfPages re-derive exactly the table
+        # writes the failed attempt never committed
+        self._table_pages = [0] * batch_size
         super().__init__(params, cfg, batch_size=batch_size,
                          max_len=max_len, plan=plan, dtype=dtype,
                          prefill_chunk=prefill_chunk,
@@ -765,32 +907,44 @@ class PagedContinuousBatchingEngine(ContinuousBatchingEngine):
     def _insert(self, res: PrefillResult, slot: int) -> None:
         self.state = insert_paged(self.state, res, slot,
                                   self.allocator.pages[slot])
+        self._table_pages[slot] = len(self.allocator.pages[slot])
         self._lease_clock += 1
         self.lease_order[slot] = self._lease_clock
 
     def _before_decode(self) -> None:
-        # grow rows whose next token crosses into a new page; one
-        # batched table update regardless of how many rows grew
-        tbl = self.state.block_tables
-        grew = False
+        # Grow rows whose next token crosses into a new page; one
+        # batched table update regardless of how many rows grew.  Two
+        # phases for crash safety: ``ensure`` may raise OutOfPages
+        # mid-loop *after* earlier rows' allocations committed on the
+        # allocator, so the device table and its host mirror are only
+        # touched once every ensure has succeeded — a retry then sees
+        # ``pages[i]`` ahead of ``_table_pages[i]`` and (re)issues
+        # exactly the writes the failed attempt never made.
+        updates = []
         for i in range(self.batch_size):
             if not self.live[i]:
                 continue
-            ids = self.allocator.ensure(i, self.row_ctx[i] + 1)
-            if ids:
-                start = len(self.allocator.pages[i]) - len(ids)
+            self.allocator.ensure(i, self.row_ctx[i] + 1)
+            ids = self.allocator.pages.get(i, [])
+            if len(ids) != self._table_pages[i]:
+                updates.append((i, self._table_pages[i],
+                                ids[self._table_pages[i]:]))
+        if updates:
+            tbl = self.state.block_tables
+            for i, start, new in updates:
                 tbl = jax.lax.dynamic_update_slice(
-                    tbl, jnp.asarray([ids], jnp.int32), (i, start))
-                grew = True
-        if grew:
+                    tbl, jnp.asarray([new], jnp.int32), (i, start))
             self.state = dataclasses.replace(self.state,
                                              block_tables=tbl)
+            for i, start, new in updates:
+                self._table_pages[i] = start + len(new)
 
     def evict(self, slot: int) -> None:
         self.allocator.release(slot)
         self.state = evict_paged(self.state, slot)
         self.row_ctx[slot] = 0
         self.live[slot] = False
+        self._table_pages[slot] = 0
 
     def preempt(self, slot: int) -> PreemptedRequest:
         """Save row ``slot``'s KV pages + position to host memory and
@@ -808,6 +962,7 @@ class PagedContinuousBatchingEngine(ContinuousBatchingEngine):
         self.state = evict_paged(self.state, slot)
         self.row_ctx[slot] = 0
         self.live[slot] = False
+        self._table_pages[slot] = 0
         return pre
 
     def resume(self, pre: PreemptedRequest, slot: int) -> None:
@@ -818,5 +973,6 @@ class PagedContinuousBatchingEngine(ContinuousBatchingEngine):
         self.state = resume_paged(self.state, pre, slot, ids)
         self.row_ctx[slot] = pre.length
         self.live[slot] = True
+        self._table_pages[slot] = len(ids)
         self._lease_clock += 1
         self.lease_order[slot] = self._lease_clock

@@ -3,6 +3,21 @@
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop jit/pjit compilation caches after each test module.  The
+    JAX-heavy modules each compile dozens of distinct graphs; letting
+    every executable from every module stay live for the whole run has
+    crashed the XLA CPU compiler late in a full single-process suite.
+    Modules rarely share shapes, so the recompile cost is negligible."""
+    yield
+    try:
+        import jax
+    except ImportError:          # pure-DSE tier without jax installed
+        return
+    jax.clear_caches()
+
+
 @pytest.fixture(autouse=True)
 def _reset_lengths_downgrade_warning():
     """Re-arm kernels.ops's warn-once masked-lengths downgrade flag
@@ -14,5 +29,7 @@ def _reset_lengths_downgrade_warning():
         yield
         return
     ops.reset_lengths_downgrade_warning()
+    ops.set_fault_injector(None)
     yield
     ops.reset_lengths_downgrade_warning()
+    ops.set_fault_injector(None)

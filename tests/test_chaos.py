@@ -1,0 +1,384 @@
+"""Chaos suite: deterministic fault injection against the serving
+stack.
+
+The acceptance contract (see docs/serving.md "Fault tolerance"): under
+every injected fault schedule the supervised stream completes with
+token-for-token parity against the fault-free run, the state auditor
+finds zero violations on every step, the per-seed incident ledger is
+bit-identical run-to-run, and a crash + snapshot-restore resumes the
+stream bit-identically.  The CI ``chaos`` job runs this file twice
+(CHAOS_SEED=0 and 1).
+"""
+
+import dataclasses
+import os
+
+import pytest
+
+# JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
+pytestmark = pytest.mark.slow
+
+import jax
+import numpy as np
+
+from repro import configs, lower
+from repro.checkpoint import CheckpointManager
+from repro.models import init_params_and_axes
+from repro.serve import (ContinuousBatchingEngine, FaultInjector,
+                         FaultSpec, IncidentLedger,
+                         PagedContinuousBatchingEngine, Request,
+                         RequestBatcher, ServingSupervisor,
+                         audit_engine, make_serving_plan)
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = configs.get_config("qwen3-8b", smoke=True)   # N=32, 2N=64
+    params, _ = init_params_and_axes(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt(cfg, key, n):
+    return [int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(key), (n,), 0, cfg.vocab_size)]
+
+
+def _requests(cfg, n=5, budget=6):
+    return [Request(uid=u, prompt=_prompt(cfg, u, 5 + 3 * u),
+                    max_new_tokens=budget) for u in range(n)]
+
+
+def _paged_stack(qwen, num_pages=13):
+    cfg, params = qwen
+    plan = make_serving_plan(cfg, 64, paged=True, page_size=8)
+    eng = PagedContinuousBatchingEngine(
+        params, cfg, batch_size=4, max_len=64, page_size=8,
+        num_pages=num_pages, plan=plan, prefill_chunk=16)
+    bat = RequestBatcher(batch_size=4, eos_id=-1, max_len=64)
+    return eng, bat
+
+
+def _dense_stack(qwen):
+    cfg, params = qwen
+    plan = make_serving_plan(cfg, 64)
+    eng = ContinuousBatchingEngine(params, cfg, batch_size=4,
+                                   max_len=64, plan=plan,
+                                   prefill_chunk=16)
+    bat = RequestBatcher(batch_size=4, eos_id=-1, max_len=64)
+    return eng, bat
+
+
+def _tokens(finished):
+    return {r.uid: list(r.generated) for r in finished}
+
+
+@pytest.fixture(scope="module")
+def paged_baseline(qwen):
+    """Fault-free supervised paged run: the parity reference."""
+    eng, bat = _paged_stack(qwen)
+    for r in _requests(qwen[0]):
+        bat.submit(r)
+    sup = ServingSupervisor(eng, bat, audit_every=1)
+    fin = sup.serve(max_steps=60)
+    assert not sup.failed and len(fin) == 5
+    return _tokens(fin)
+
+
+# ---------------------------------------------------------------------------
+# fast tier: injector, ledger, ladder (no engine)
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="gremlin", step=0)
+
+
+def test_fault_injector_seed_determinism():
+    """Same seed -> identical schedule AND identical fired log when
+    replayed against the same consultation pattern; different seed ->
+    different schedule."""
+    def replay(inj):
+        for t in range(24):
+            inj.begin_step(t)
+            try:
+                inj.on_alloc(0, 1)
+            except Exception:
+                pass
+            try:
+                inj.on_kernel("attention", "pallas")
+            except Exception:
+                pass
+            inj.nan_slot()
+            inj.preempt_storm()
+        return inj.fired
+
+    mk = lambda s: FaultInjector.from_seed(s, steps=24, slots=4,
+                                           rate=0.4)
+    a, b = mk(CHAOS_SEED), mk(CHAOS_SEED)
+    assert [dataclasses.asdict(s) for s in a.schedule] == \
+           [dataclasses.asdict(s) for s in b.schedule]
+    assert a.schedule                      # rate 0.4 over 24 steps
+    assert replay(a) == replay(b)
+    other = mk(CHAOS_SEED + 1)
+    assert [dataclasses.asdict(s) for s in a.schedule] != \
+           [dataclasses.asdict(s) for s in other.schedule]
+
+
+def test_fault_spec_times_budget():
+    """times=1 fails once then lets the retry through; times=None is
+    persistent within the step; both re-arm on a fresh begin_step."""
+    inj = FaultInjector([FaultSpec("oom", step=0, times=1),
+                         FaultSpec("nan", step=1, slot=2, times=None)])
+    inj.begin_step(0)
+    with pytest.raises(Exception):
+        inj.on_alloc("k", 2)
+    inj.on_alloc("k", 2)                   # budget spent: retry passes
+    inj.begin_step(1)
+    assert inj.nan_slot() == 2
+    assert inj.nan_slot() == 2             # persistent all step
+    inj.begin_step(2)
+    assert inj.nan_slot() is None          # not armed off its step
+
+
+def test_incident_ledger_excludes_timing():
+    led = IncidentLedger()
+    led.record(3, 1, "nan", "quarantine", "requeued")
+    led.record(4, None, "stuck_step", "watchdog", "noted")
+    assert led.counts() == {"nan": 1, "stuck_step": 1}
+    assert [r["fault"] for r in led.rows()] == ["nan"]
+    assert "stuck_step" not in led.to_json()
+    assert "stuck_step" in led.to_json(include_timing=True)
+    assert len(led) == 2
+
+
+def test_rung_down_walks_full_ladder():
+    """The kernel-failure recovery primitive descends the whole ladder
+    megakernel -> qproj -> fused -> unfused/reference -> unfused/xla,
+    records every step on the plan's downgrade ledger, and returns
+    None off the bottom rung."""
+    @dataclasses.dataclass(frozen=True)
+    class ToyConfig:
+        name: str = "toy"
+        d_model: int = 128
+        n_heads: int = 4
+        kv_heads: int = 2
+        head_dim: int = 32
+        d_ff: int = 256
+        mlp: str = "silu_glu"
+        rope_theta: float = 1e6
+        qk_norm: bool = False
+        n_layers: int = 2
+
+    plan = lower.lower(ToyConfig(), "decode", 256)
+    d = lower.dispatch(plan, backend="tpu", entry="decode_block",
+                       rope=True)
+    assert (d.path, d.impl) == (lower.DECODE_MEGAKERNEL, "pallas")
+    seen, before = [], len(plan.downgrades)
+    while d is not None:
+        d = lower.rung_down(d, "chaos test")
+        if d is not None:
+            seen.append((d.path, d.impl))
+    assert seen == [(lower.QPROJ_ATTENTION, "pallas"),
+                    (lower.FUSED_ATTENTION, "pallas"),
+                    (lower.UNFUSED, "reference"),
+                    (lower.UNFUSED, "xla")]
+    new = plan.downgrades[before:]
+    assert len(new) == 4
+    assert all("chaos test" in dg.reason and "rung-down" in dg.reason
+               for dg in new)
+
+
+# ---------------------------------------------------------------------------
+# engine tier: supervised chaos runs
+# ---------------------------------------------------------------------------
+
+def test_paged_chaos_all_fault_kinds_token_parity(qwen, paged_baseline):
+    """One schedule exercising every fault kind against the paged
+    engine: injected OOM, a persistent sick kernel, two NaN
+    poisonings, and a preemption storm.  The stream must complete with
+    token parity vs the fault-free run, zero audit violations on every
+    step, and the kernel demotion must decay back to the planned
+    path."""
+    eng, bat = _paged_stack(qwen)
+    for r in _requests(qwen[0]):
+        bat.submit(r)
+    # at smoke contexts (< crossover 2N=64) the resolved impl is the
+    # unfused "reference" path — kernel faults must match it to fire
+    inj = FaultInjector([
+        FaultSpec("nan", step=1, slot=1),
+        FaultSpec("oom", step=2, times=1),
+        FaultSpec("kernel", step=3, impl="reference", times=None),
+        FaultSpec("nan", step=4, slot=2),
+        FaultSpec("preempt", step=5, count=2),
+    ])
+    sup = ServingSupervisor(eng, bat, injector=inj, cooloff=2,
+                            audit_every=1)
+    fin = sup.serve(max_steps=80)
+    assert not sup.failed
+    assert _tokens(fin) == paged_baseline
+    counts = sup.ledger.counts()
+    assert all(counts.get(k, 0) > 0
+               for k in ("oom", "kernel", "nan", "preempt"))
+    assert {f[1] for f in inj.fired} == {"oom", "kernel", "nan",
+                                         "preempt"}
+    # the sick kernel forced a rung-down, recorded on the plan ledger…
+    assert any("kernel-failure recovery" in dg.reason
+               for dg in eng.last_dispatch.plan.downgrades)
+    # …and clean steps decayed the demotion back to the planned path
+    assert eng.demotions == 0
+    assert counts.get("cooloff", 0) > 0
+    assert audit_engine(eng, bat) == []
+
+
+def test_dense_chaos_token_parity(qwen):
+    """The dense engine recovers through the same supervisor: NaN
+    quarantine (via dense preempt/resume), a preemption storm, and a
+    sick kernel all leave token parity intact."""
+    reqs = lambda: _requests(qwen[0], n=4)
+    eng0, bat0 = _dense_stack(qwen)
+    for r in reqs():
+        bat0.submit(r)
+    base = _tokens(ServingSupervisor(eng0, bat0).serve(max_steps=60))
+
+    eng, bat = _dense_stack(qwen)
+    for r in reqs():
+        bat.submit(r)
+    inj = FaultInjector([
+        FaultSpec("nan", step=2, slot=0),
+        FaultSpec("kernel", step=3, impl="reference", times=1),
+        FaultSpec("preempt", step=4, count=1),
+    ])
+    sup = ServingSupervisor(eng, bat, injector=inj)
+    fin = sup.serve(max_steps=80)
+    assert not sup.failed
+    assert _tokens(fin) == base
+    assert {f[1] for f in inj.fired} == {"nan", "kernel", "preempt"}
+
+
+def test_seeded_chaos_ledger_deterministic(qwen, paged_baseline):
+    """The CI gate: the same CHAOS_SEED replayed through a full
+    supervised run produces a bit-identical incident ledger and fired
+    log — and still lands token parity."""
+    def run():
+        eng, bat = _paged_stack(qwen)
+        for r in _requests(qwen[0]):
+            bat.submit(r)
+        inj = FaultInjector.from_seed(
+            CHAOS_SEED, steps=10, slots=4, rate=0.5, impl="reference")
+        sup = ServingSupervisor(eng, bat, injector=inj, retry_budget=8,
+                                audit_every=1)
+        fin = sup.serve(max_steps=120)
+        return sup, inj, fin
+
+    sup_a, inj_a, fin_a = run()
+    sup_b, inj_b, fin_b = run()
+    assert inj_a.fired == inj_b.fired
+    assert sup_a.ledger.to_json() == sup_b.ledger.to_json()
+    assert _tokens(fin_a) == _tokens(fin_b)
+    # every non-failed request keeps parity with the fault-free run
+    assert not sup_a.failed
+    assert _tokens(fin_a) == paged_baseline
+
+
+def test_crash_snapshot_restore_bit_identical(qwen, paged_baseline,
+                                              tmp_path):
+    """Crash mid-stream, restore the latest whole-engine snapshot into
+    a FRESH engine + batcher + supervisor, continue: the completed
+    stream is token-identical to the uncrashed run."""
+    eng, bat = _paged_stack(qwen)
+    for r in _requests(qwen[0]):
+        bat.submit(r)
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    sup = ServingSupervisor(eng, bat, ckpt=mgr, checkpoint_every=3,
+                            audit_every=1)
+    for _ in range(7):                     # checkpoints land at t=3, 6
+        assert bat.active or eng._pending
+        sup.step()
+    assert mgr.latest_step() == 6
+    del sup, eng, bat                      # the "crash"
+
+    eng2, bat2 = _paged_stack(qwen)        # nothing submitted: restore
+    sup2 = ServingSupervisor(eng2, bat2,   # owns the queue wholesale
+                             ckpt=CheckpointManager(str(tmp_path)),
+                             audit_every=1)
+    sup2.restore()
+    assert sup2.t == 6
+    assert audit_engine(eng2, bat2) == []
+    fin = sup2.serve(max_steps=80)
+    assert not sup2.failed
+    assert _tokens(fin) == paged_baseline
+
+
+def test_audit_detects_seeded_corruption(qwen):
+    """The auditor is not a rubber stamp: a healthy mid-stream engine
+    audits clean, and each seeded corruption of the allocator/table
+    state surfaces as a violation (and audits clean again once
+    repaired)."""
+    eng, bat = _paged_stack(qwen)
+    for r in _requests(qwen[0], n=3):
+        bat.submit(r)
+    sup = ServingSupervisor(eng, bat)
+    for _ in range(3):
+        sup.step()
+    assert audit_engine(eng, bat) == []
+    live = [i for i, a in enumerate(eng.live) if a]
+    assert len(live) >= 2
+    a, b = live[0], live[1]
+
+    # free/lease overlap
+    page = eng.allocator.pages[a][0]
+    eng.allocator._free.append(page)
+    bad = audit_engine(eng, bat)
+    assert any("both free and leased" in v for v in bad)
+    eng.allocator._free.pop()
+    assert audit_engine(eng, bat) == []
+
+    # double-lease across keys (also breaks b's table-prefix match)
+    stolen = eng.allocator.pages[b].pop()
+    eng.allocator.pages[a].append(eng.allocator.pages[a][0])
+    eng.allocator._free.append(stolen)
+    bad = audit_engine(eng, bat)
+    assert any("listed twice" in v or "double-leased" in v
+               for v in bad)
+    eng.allocator.pages[a].pop()
+    eng.allocator.pages[b].append(eng.allocator._free.pop())
+    assert audit_engine(eng, bat) == []
+
+    # dangling lease / cache_len vs row_ctx divergence
+    eng.allocator.pages["ghost"] = [eng.allocator._free.pop()]
+    bad = audit_engine(eng, bat)
+    assert any("dangling lease" in v for v in bad)
+    eng.allocator._free.append(eng.allocator.pages.pop("ghost")[0])
+    eng.row_ctx[a] += 1
+    bad = audit_engine(eng, bat)
+    assert any("row_ctx" in v for v in bad)
+    eng.row_ctx[a] -= 1
+    assert audit_engine(eng, bat) == []
+
+
+def test_nan_retry_budget_exhaustion_fails_visibly(qwen,
+                                                   paged_baseline):
+    """A slot poisoned past its retry budget FAILS the request —
+    ledger row, ``failed`` flag, supervisor.failed — never a silent
+    drop; the rest of the batch completes with parity."""
+    eng, bat = _paged_stack(qwen)
+    for r in _requests(qwen[0], n=4):
+        bat.submit(r)
+    # slot 0 is poisoned on every early step; its request requeues to
+    # the queue front and re-admits into slot 0 (lowest free slot), so
+    # the same uid burns its whole budget
+    inj = FaultInjector([FaultSpec("nan", step=t, slot=0)
+                         for t in range(1, 6)])
+    sup = ServingSupervisor(eng, bat, injector=inj, retry_budget=1,
+                            audit_every=1)
+    fin = sup.serve(max_steps=80)
+    assert [r.uid for r in sup.failed] == [0]
+    assert sup.failed[0].failed and sup.failed[0].done
+    assert any(i.outcome == "failed (retry budget exhausted)"
+               for i in sup.ledger.incidents)
+    got = _tokens(fin)
+    assert set(got) == {1, 2, 3}
+    assert all(got[u] == paged_baseline[u] for u in got)
+    assert audit_engine(eng, bat) == []

@@ -12,7 +12,7 @@ import pytest
 # JAX-heavy tier: deselect with -m 'not slow' for the fast core-DSE tier
 pytestmark = pytest.mark.slow
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 from repro.data import SyntheticTokenDataset, make_batch_iterator
 from repro.runtime import StepTimer, run_with_restarts
 
@@ -51,8 +51,58 @@ def test_checkpoint_atomic_no_tmp_left(tmp_path):
 def test_structure_mismatch_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(0, _tree(), blocking=True)
-    with pytest.raises(AssertionError):
+    with pytest.raises(CheckpointError, match="structure mismatch"):
         mgr.restore({"a": jnp.zeros((4, 8))})
+
+
+def test_restore_without_checkpoints_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        mgr.restore(_tree())
+    mgr.save(2, _tree(), blocking=True)
+    with pytest.raises(CheckpointError, match="step 7 missing"):
+        mgr.restore(_tree(), step=7)
+
+
+def test_restore_truncated_leaf_raises_clear_error(tmp_path):
+    """A leaf file cut short by a crash/partial copy surfaces as a
+    CheckpointError naming the leaf — not a numpy shape error."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    leaf = os.path.join(tmp_path, "step_000000001", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.truncate(os.path.getsize(leaf) // 2)
+    with pytest.raises(CheckpointError,
+                       match="truncated or corrupt"):
+        mgr.restore(_tree())
+    os.remove(leaf)
+    with pytest.raises(CheckpointError, match="missing"):
+        mgr.restore(_tree())
+
+
+def test_restore_corrupt_manifest_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    man = os.path.join(tmp_path, "step_000000001", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 1, "leaves": [truncated')
+    with pytest.raises(CheckpointError, match="manifest.json corrupt"):
+        mgr.restore(_tree())
+
+
+def test_restore_flat_roundtrip(tmp_path):
+    """restore_flat hands back the raw leaf list (manifest order) +
+    extras without needing a like-structured pytree — the serving
+    snapshot's loading path."""
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(5, t, extras={"kind": "dense"}, blocking=True)
+    leaves, extras = mgr.restore_flat()
+    assert extras == {"kind": "dense"}
+    want = jax.tree.leaves(t)
+    assert len(leaves) == len(want)
+    for a, b in zip(leaves, want):
+        np.testing.assert_array_equal(a, np.asarray(b))
 
 
 def test_run_with_restarts_identical_to_uninterrupted(tmp_path):
@@ -96,6 +146,47 @@ def test_step_timer_flags_stragglers():
     t.start()
     _t.sleep(0.05)
     assert t.stop()
+
+
+def test_step_timer_window_and_median():
+    """The straggler baseline is the median over the trailing
+    ``window`` samples only — a slow warm-up ages out instead of
+    inflating the threshold forever."""
+    import time as _t
+    t = StepTimer(k=2.0, window=4)
+    # pretend history: long-gone slow steps, then a fast steady state
+    t.times = [10.0] * 10 + [0.001] * 4
+    t.start()
+    _t.sleep(0.02)
+    # vs the full history (median 10s) this step would pass; vs the
+    # trailing window (median 1ms) it is flagged
+    assert t.stop()
+    assert t.median > 1.0               # median property spans it all
+    assert StepTimer().median == 0.0    # and is 0 with no samples
+
+
+def test_run_with_restarts_fresh_process_resumes_from_latest(tmp_path):
+    """A brand-new run_with_restarts call (a restarted process, not an
+    in-loop retry) resumes from the latest checkpoint and replays only
+    the remaining steps."""
+    def make_state():
+        return {"x": jnp.zeros(())}
+
+    def clean_step(state, step):
+        return {"x": state["x"] * 1.01 + step}
+
+    s = make_state()
+    for i in range(20):
+        s = clean_step(s, i)
+
+    ckpt = CheckpointManager(str(tmp_path), keep_last=5)
+    run_with_restarts(lambda: clean_step, make_state, ckpt,
+                      total_steps=10, checkpoint_every=5)
+    final, stats = run_with_restarts(lambda: clean_step, make_state,
+                                     ckpt, total_steps=20,
+                                     checkpoint_every=5)
+    assert stats["restarts"] == 0 and stats["steps_run"] == 10
+    np.testing.assert_allclose(final["x"], s["x"], rtol=1e-6)
 
 
 def test_data_pipeline_deterministic_and_resumable():

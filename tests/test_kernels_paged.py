@@ -199,6 +199,21 @@ def test_page_allocator_accounting():
     assert a.release("missing") == []
 
 
+def test_page_allocator_release_idempotent_with_note():
+    """Double release is a no-op that leaves a breadcrumb: the second
+    call returns [] without disturbing the free list, and the smell is
+    recorded on ``notes`` for the auditor/ledger to surface."""
+    a = PageAllocator(num_pages=8, page_size=16)
+    ids = a.alloc("r0", 3)
+    assert a.release("r0") == ids and a.notes == []
+    free_before = list(a._free)
+    assert a.release("r0") == []                   # idempotent no-op
+    assert a._free == free_before and a.used_pages == 0
+    assert len(a.notes) == 1 and "r0" in a.notes[0]
+    a.release("never-leased")
+    assert len(a.notes) == 2 and "never-leased" in a.notes[1]
+
+
 @pytest.fixture(scope="module")
 def qwen():
     cfg = configs.get_config("qwen3-8b", smoke=True)

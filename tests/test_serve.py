@@ -40,6 +40,29 @@ def test_batcher_slot_lifecycle():
     assert len(prefills) >= 2           # refilled after completion
 
 
+def test_batcher_submit_validates_prompts():
+    """submit() fails fast on malformed requests — empty prompts,
+    non-integer tokens, non-1-D shapes, zero generation budget — with
+    a ValueError naming the request, instead of a shape error deep
+    inside prefill.  Valid array-ish prompts are normalised to a plain
+    list of ints."""
+    b = RequestBatcher(batch_size=2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        b.submit(Request(uid=0, prompt=[], max_new_tokens=3))
+    with pytest.raises(ValueError, match="must be integers"):
+        b.submit(Request(uid=1, prompt=[1.5, 2.0], max_new_tokens=3))
+    with pytest.raises(ValueError, match="1-D"):
+        b.submit(Request(uid=2, prompt=np.array([[1, 2], [3, 4]]),
+                         max_new_tokens=3))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        b.submit(Request(uid=3, prompt=[1, 2], max_new_tokens=0))
+    assert not b.queue                  # nothing malformed got queued
+    b.submit(Request(uid=4, prompt=np.array([5, 6, 7]),
+                     max_new_tokens=3))
+    assert b.queue[0].prompt == [5, 6, 7]
+    assert all(type(t) is int for t in b.queue[0].prompt)
+
+
 def test_batcher_eos_terminates():
     b = RequestBatcher(batch_size=1, eos_id=7)
     b.submit(Request(uid=0, prompt=[1], max_new_tokens=100))
